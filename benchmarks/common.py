@@ -1,0 +1,119 @@
+"""Shared benchmark plumbing: explore a workload in-process, return the store."""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+RESULTS = os.path.join(REPO, "results")
+
+
+def generation_space(arch):
+    from repro.core.space import DesignSpace, Knob, KIND_HW, KIND_SW
+    from repro.roofline import hw as hwmod
+
+    knobs = [
+        Knob("clock_scale", hwmod.CLOCK_LADDER, KIND_HW),
+        Knob("hbm_scale", hwmod.HBM_LADDER, KIND_HW),
+        Knob("ici_scale", hwmod.ICI_LADDER, KIND_HW),
+        Knob("dp_degree", (1,), KIND_SW),
+        Knob("dtype", ("bfloat16",), KIND_SW),
+        Knob("attn_block_q", (128, 256, 512), KIND_SW),
+        Knob("attn_block_kv", (128, 256, 512), KIND_SW),
+    ]
+    return DesignSpace(knobs)
+
+
+def explore_generation(arch_name: str, n_samples: int, algo_name: str = "random",
+                       seed: int = 0, clients: int = 2, chips: int = 8,
+                       prompt_len: int = 64, gen_tokens: int = 150,
+                       csv_path: str = None):
+    """Run the paper's experiment: N sampled configs of a generation workload.
+
+    Returns (store, wall_s, n_compiles, n_evals).
+    """
+    from repro.configs import get_arch
+    from repro.configs.base import ShapeConfig
+    from repro.core import (ALGORITHMS, JClient, JConfig, JHost, ResultStore,
+                            transport)
+    from repro.launch.build import build_generation
+    from repro.launch.mesh import make_mesh_dp_tp
+    from repro.roofline.analysis import summarize
+    from repro.roofline.traffic import analytic_hbm_bytes_per_device
+
+    arch = get_arch(arch_name)
+    if arch.frontend == "vision":
+        # the image contributes n_frontend_tokens to the prompt (paper Fig. 4:
+        # image + short text prompt)
+        prompt_len = arch.n_frontend_tokens + max(prompt_len - arch.n_frontend_tokens, 32)
+    space = generation_space(arch)
+    jc = JConfig(space, n_chips=chips)
+
+    def build(tc):
+        flags = jc.build_flags(tc.knobs)
+        dp, tp = 1, chips
+        mesh = make_mesh_dp_tp(dp, tp)
+        pre_cell, dec_cell = build_generation(
+            arch, mesh, flags, batch=1, prompt_len=prompt_len,
+            max_len=prompt_len + gen_tokens + 1)
+        pre = summarize(pre_cell.compiled, mesh.size)
+        dec = summarize(dec_cell.compiled, mesh.size)
+        pre.hbm_est_per_device = analytic_hbm_bytes_per_device(
+            arch, ShapeConfig("p", "prefill", prompt_len, 1), flags,
+            mesh.size, dp, tp)
+        dec.hbm_est_per_device = analytic_hbm_bytes_per_device(
+            arch, ShapeConfig("d", "decode", prompt_len + gen_tokens + 1, 1),
+            flags, mesh.size, dp, tp)
+        return pre, {"decode_artifact": dec, "n_decode_tokens": gen_tokens}
+
+    pair = transport.LoopbackPair(clients)
+    cls = [JClient(jc, build, transport=pair.client(i), client_id=i)
+           for i in range(clients)]
+    for c in cls:
+        threading.Thread(target=c.serve,
+                         kwargs=dict(poll_s=0.05, idle_limit_s=None),
+                         daemon=True).start()
+    store = ResultStore(csv_path=csv_path)
+    host = JHost(pair.host(), store, timeout_s=900.0, poll_s=0.02)
+    algo = ALGORITHMS[algo_name](space, seed=seed)
+    t0 = time.time()
+    host.explore(algo, arch_name, "generate", n_samples,
+                 objectives=("time_s", "power_w"))
+    host.stop_clients()
+    wall = time.time() - t0
+    return store, wall, sum(c.n_compiled for c in cls), n_samples
+
+
+def scatter_png(store, path: str, title: str):
+    """Paper Fig 2/4-style power-vs-time scatter, colored by the EMC-analogue."""
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return False
+    import numpy as np
+
+    recs = store.ok_records()
+    t = np.array([r.metrics["time_s"] for r in recs])
+    p = np.array([r.metrics["power_w"] for r in recs])
+    emc = np.array([r.knobs["hbm_scale"] for r in recs])
+    low = emc == emc.min()
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    ax.scatter(t[~low], p[~low], s=14, label="hbm_scale > 1/16")
+    ax.scatter(t[low], p[low], s=14, c="tab:red", label="hbm_scale = 1/16 (EMC-analogue)")
+    ax.set_xlabel("time (s)")
+    ax.set_ylabel("avg power per chip (W)")
+    ax.set_title(title)
+    ax.legend()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fig.savefig(path, dpi=120, bbox_inches="tight")
+    plt.close(fig)
+    return True

@@ -1,0 +1,76 @@
+"""Multi-board exploration over ZMQ — the paper's deployment shape.
+
+    PYTHONPATH=src python examples/multi_board_zmq.py
+
+Spawns two client *processes* (stand-ins for two Jetson boards / TPU slices),
+each binding a ZMQ PULL socket for configs and PUSHing results back to the
+host — the exact socket roles of paper §III.  The host runs NSGA-II and
+re-queues work if a board dies (kill a client mid-run to watch).
+"""
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+CLIENT_CODE_TEMPLATE = """
+import sys
+sys.path.insert(0, SRC_PATH)
+from repro.core import JClient, JConfig, tpu_pod_space, transport
+from repro.roofline.analysis import Artifact
+
+cid, cfg_port, res_port = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+space = tpu_pod_space(n_chips=64)
+jc = JConfig(space, n_chips=64)
+
+def build(tc):
+    # stand-in workload (a real board would compile the model here)
+    import hashlib
+    h = int(hashlib.md5(str(sorted(tc.knobs.items())).encode()).hexdigest(), 16)
+    return Artifact(flops_per_device=4e12 + (h % 7) * 1e11,
+                    bytes_per_device=2e10, wire_bytes_per_device=2e8,
+                    collectives={}, arg_bytes=10**9, temp_bytes=10**8,
+                    output_bytes=10**6, n_devices=64), {}
+
+t = transport.ZmqClientTransport(f"tcp://127.0.0.1:{cfg_port}",
+                                 f"tcp://127.0.0.1:{res_port}")
+served = JClient(jc, build, transport=t, client_id=cid).serve(poll_s=0.2,
+                                                              idle_limit_s=30)
+print(f"[board {cid}] served {served} configs", flush=True)
+"""
+CLIENT_CODE = ("SRC_PATH = %r\n" % os.path.abspath(SRC)) + CLIENT_CODE_TEMPLATE
+
+
+def main():
+    from repro.core import (JHost, NSGA2, ResultStore, tpu_pod_space,
+                            transport)
+
+    cfg_ports, res_port = [15701, 15702], 15700
+    procs = [subprocess.Popen([sys.executable, "-c", CLIENT_CODE,
+                               str(i), str(cfg_ports[i]), str(res_port)])
+             for i in range(2)]
+    time.sleep(1.0)  # let boards bind
+
+    host_t = transport.ZmqHostTransport(
+        f"tcp://*:{res_port}",
+        {i: f"tcp://127.0.0.1:{cfg_ports[i]}" for i in range(2)})
+    space = tpu_pod_space(n_chips=64)
+    host = JHost(host_t, ResultStore(), timeout_s=20.0)
+    host.explore(NSGA2(space, seed=0, pop_size=12), "toy", "train_4k", 48,
+                 progress=True)
+    host.stop_clients()
+
+    front = host.store.pareto_front(["time_s", "power_w"])
+    by_client = {}
+    for r in host.store.ok_records():
+        by_client[r.client_id] = by_client.get(r.client_id, 0) + 1
+    print(f"explored 48 configs across boards {by_client}; "
+          f"pareto front = {len(front)} points")
+    for p in procs:
+        p.wait(timeout=40)
+
+
+if __name__ == "__main__":
+    main()

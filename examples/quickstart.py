@@ -1,0 +1,73 @@
+"""Quickstart: explore a design space over a real JAX workload in-process.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+This is the 60-second version of the paper's Algorithm 1: a JHost drives two
+JClients (threads here; separate hosts on a real fleet) that compile a small
+llama-family model once per software-knob variant and evaluate the hardware
+ladders analytically — then prints the Pareto frontier.
+"""
+import os
+import sys
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import (JClient, JConfig, JHost, RandomSearch, ResultStore,
+                        transport)
+from repro.core.space import DesignSpace, Knob, KIND_HW, KIND_SW
+from repro.launch.build import build_generation
+from repro.launch.mesh import make_host_mesh
+from repro.roofline.analysis import summarize
+from repro.roofline.hw import CLOCK_LADDER, HBM_LADDER, ICI_LADDER
+from repro.roofline.traffic import analytic_hbm_bytes_per_device
+
+# 1. the design space — Table I of the TPU adaptation
+space = DesignSpace([
+    Knob("clock_scale", CLOCK_LADDER, KIND_HW),   # GPU-freq analogue
+    Knob("hbm_scale", HBM_LADDER, KIND_HW),       # EMC-freq analogue
+    Knob("ici_scale", ICI_LADDER, KIND_HW),
+    Knob("attn_block_q", (16, 32), KIND_SW),      # kernel tiling (recompiles)
+])
+jc = JConfig(space, n_chips=1)
+
+# 2. the workload — anything; here: greedy generation with a reduced llama2
+arch = reduced(get_arch("llama2-7b"))
+mesh = make_host_mesh()
+
+
+def build(tc):
+    flags = jc.build_flags(tc.knobs)
+    pre_cell, dec_cell = build_generation(arch, mesh, flags, batch=1,
+                                          prompt_len=16, max_len=48)
+    pre, dec = summarize(pre_cell.compiled, 1), summarize(dec_cell.compiled, 1)
+    pre.hbm_est_per_device = analytic_hbm_bytes_per_device(
+        arch, ShapeConfig("p", "prefill", 16, 1), flags, 1, 1, 1)
+    dec.hbm_est_per_device = analytic_hbm_bytes_per_device(
+        arch, ShapeConfig("d", "decode", 48, 1), flags, 1, 1, 1)
+    return pre, {"decode_artifact": dec, "n_decode_tokens": 32}
+
+
+# 3. boards (threads here, ZMQ hosts on a fleet) + host + search algorithm
+pair = transport.LoopbackPair(2)
+for i in range(2):
+    c = JClient(jc, build, transport=pair.client(i), client_id=i)
+    threading.Thread(target=c.serve, kwargs=dict(poll_s=0.02,
+                                                 idle_limit_s=None),
+                     daemon=True).start()
+
+host = JHost(pair.host(), ResultStore(), timeout_s=300)
+host.explore(RandomSearch(space, seed=0), arch.name, "generate", 40)
+
+# 4. results
+front = host.store.pareto_front(["time_s", "power_w"])
+print(f"\nexplored 40 configs; pareto frontier ({len(front)} points):")
+for r in sorted(front, key=lambda r: r.metrics["time_s"]):
+    print(f"  time {r.metrics['time_s']*1e3:8.3f} ms   power {r.metrics['power_w']:5.1f} W"
+          f"   clock={r.knobs['clock_scale']:<5} hbm={r.knobs['hbm_scale']:.3f}"
+          f" ici={r.knobs['ici_scale']:.2f}")
+host.stop_clients()

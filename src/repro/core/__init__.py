@@ -1,0 +1,16 @@
+"""JExplore core — the paper's contribution, TPU-native.
+
+JHost orchestrates search over N JClients; JConfig manages the knob space;
+JMeasure measures; results stream to CSV.  See DESIGN.md.
+"""
+from repro.core.space import DesignSpace, Knob, tpu_pod_space, KIND_HW, KIND_SW
+from repro.core.jconfig import JConfig, TestConfig
+from repro.core.jmeasure import JMeasure, JTime, JPower, JMemory, DEFAULT_MEASURES
+from repro.core.jclient import JClient
+from repro.core.jhost import JHost
+from repro.core.results import ResultRecord, ResultStore, nondominated_mask
+from repro.core import transport
+from repro.core.search import (
+    ALGORITHMS, SearchAlgorithm, RandomSearch, GridSearch, NSGA2, BayesOpt, PAL,
+    hypervolume,
+)

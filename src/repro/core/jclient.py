@@ -1,0 +1,95 @@
+"""JClient — the device-side worker (paper §III, Algorithm 1).
+
+Capabilities, mirroring the paper:
+  1. configure the device + workload from a received testConfig (JConfig);
+  2. measure (JMeasure set, enable/disable at construction);
+  3. communicate with the host (any ClientTransport).
+
+The workload is injected as ``build_fn(TestConfig) -> (Artifact, meta)`` —
+"the workloads can be anything as JExplore is agnostic to the workload".
+Compiled artifacts are cached by the sw-knob fingerprint, the analogue of the
+network staying resident on a Jetson while only clocks change.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.jconfig import JConfig, TestConfig
+from repro.core.jmeasure import DEFAULT_MEASURES, JMeasure
+from repro.core.transport import ClientTransport
+from repro.roofline.analysis import Artifact
+
+BuildResult = Tuple[Artifact, Dict]
+
+
+class JClient:
+    def __init__(self, jconfig: JConfig,
+                 build_fn: Callable[[TestConfig], BuildResult],
+                 measures: Sequence[JMeasure] = DEFAULT_MEASURES,
+                 transport: Optional[ClientTransport] = None,
+                 client_id: int = 0,
+                 cache_size: int = 64):
+        self.jconfig = jconfig
+        self.build_fn = build_fn
+        self.measures = tuple(measures)
+        self.transport = transport
+        self.client_id = client_id
+        self._cache: Dict[tuple, BuildResult] = {}
+        self._cache_size = cache_size
+        self.n_evaluated = 0
+        self.n_compiled = 0
+
+    # -- single evaluation -------------------------------------------------
+    def evaluate(self, tc: TestConfig) -> dict:
+        t0 = time.monotonic()
+        key = self.jconfig.cache_key(tc)
+        cached = key in self._cache
+        try:
+            if not cached:
+                if len(self._cache) >= self._cache_size:
+                    self._cache.pop(next(iter(self._cache)))
+                self._cache[key] = self.build_fn(tc)
+                self.n_compiled += 1
+            art, meta = self._cache[key]
+            hw = self.jconfig.hw_model(tc.knobs)
+            metrics: Dict[str, float] = {}
+            for m in self.measures:
+                metrics.update(m.measure(art, hw, meta))
+            status = "ok"
+        except Exception:
+            metrics = {}
+            status = "failed"
+            metrics["error"] = traceback.format_exc(limit=3)
+        self.n_evaluated += 1
+        return {
+            "config_id": tc.config_id,
+            "arch": tc.arch,
+            "shape": tc.shape,
+            "knobs": tc.knobs,
+            "metrics": metrics,
+            "status": status,
+            "client_id": self.client_id,
+            "cached": cached,
+            "wall_s": time.monotonic() - t0,
+        }
+
+    # -- Algorithm 1, JCLIENT procedure ---------------------------------------
+    def serve(self, poll_s: float = 1.0, idle_limit_s: Optional[float] = None) -> int:
+        assert self.transport is not None, "serve() needs a transport"
+        served = 0
+        idle = 0.0
+        while True:
+            msg = self.transport.pull(poll_s)
+            if msg is None:
+                idle += poll_s
+                if idle_limit_s is not None and idle >= idle_limit_s:
+                    return served
+                continue
+            idle = 0.0
+            if msg.get("cmd") == "stop":
+                return served
+            result = self.evaluate(TestConfig.from_wire(msg))
+            self.transport.push(result)
+            served += 1

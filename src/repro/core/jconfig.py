@@ -1,0 +1,78 @@
+"""JConfig — configuration management (paper §III).
+
+Turns a design-point dict into everything the client needs to apply it:
+  * ``BuildFlags``  — the HLO-affecting (sw) subset
+  * mesh factorisation (dp, tp)
+  * ``HwModel``     — the hardware-ladder (hw) subset
+  * ``cache_key``   — hashable sw fingerprint; JClient re-uses the compiled
+    artifact when only hw knobs changed (the analogue of Jetson re-clocking
+    without touching the deployed network).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.space import DesignSpace, KIND_SW
+from repro.models.model import BuildFlags
+from repro.roofline.hw import HwModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TestConfig:
+    """One unit of work pushed host → client (Algorithm 1's testConfig)."""
+    config_id: int
+    arch: str
+    shape: str
+    knobs: Dict[str, Any]
+
+    def to_wire(self) -> dict:
+        return {"config_id": self.config_id, "arch": self.arch,
+                "shape": self.shape, "knobs": self.knobs}
+
+    @staticmethod
+    def from_wire(d: dict) -> "TestConfig":
+        return TestConfig(d["config_id"], d["arch"], d["shape"], d["knobs"])
+
+
+TestConfig.__test__ = False  # not a pytest class
+
+
+class JConfig:
+    def __init__(self, space: DesignSpace, n_chips: int = 256):
+        self.space = space
+        self.n_chips = n_chips
+
+    def build_flags(self, knobs: Dict[str, Any]) -> BuildFlags:
+        kw = {}
+        for f in ("dtype", "remat", "loss_chunks", "attn_block_q",
+                  "attn_block_kv", "sp", "fsdp", "grad_rs"):
+            if f in knobs:
+                kw[f] = knobs[f]
+        return BuildFlags(**kw)
+
+    def mesh_factors(self, knobs: Dict[str, Any]) -> Tuple[int, int]:
+        dp = int(knobs.get("dp_degree", 16))
+        assert self.n_chips % dp == 0, (dp, self.n_chips)
+        return dp, self.n_chips // dp
+
+    def microbatch(self, knobs: Dict[str, Any]) -> int:
+        return int(knobs.get("microbatch", 1))
+
+    def ssd_chunk(self, knobs: Dict[str, Any]) -> Optional[int]:
+        return knobs.get("ssd_chunk")
+
+    def hw_model(self, knobs: Dict[str, Any]) -> HwModel:
+        return HwModel(
+            n_chips=self.n_chips,
+            clock_scale=float(knobs.get("clock_scale", 1.0)),
+            hbm_scale=float(knobs.get("hbm_scale", 1.0)),
+            ici_scale=float(knobs.get("ici_scale", 1.0)),
+            dtype=str(knobs.get("dtype", "bfloat16")),
+        )
+
+    def cache_key(self, tc: TestConfig) -> Tuple:
+        """Fingerprint of everything that changes the compiled artifact."""
+        sw = tuple(sorted((k.name, tc.knobs[k.name]) for k in self.space
+                          if k.kind == KIND_SW and k.name in tc.knobs))
+        return (tc.arch, tc.shape, sw)

@@ -1,0 +1,111 @@
+"""JHost — the host-side orchestrator (paper §III, Algorithm 1).
+
+Interfaces a user-defined search algorithm with N clients:
+  * batch dispatch — as many in-flight configs as there are free clients, so
+    batch-sampling search algorithms "work faster" (paper contribution 2);
+  * straggler mitigation / fault tolerance — every dispatched config carries a
+    deadline; on timeout it is re-queued to a healthy client (up to
+    ``max_retries``), and the late client is quarantined;
+  * result saving — every result lands in a ResultStore (CSV streaming).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.jconfig import TestConfig
+from repro.core.results import ResultRecord, ResultStore
+from repro.core.search.base import SearchAlgorithm
+from repro.core.transport import HostTransport
+
+
+class JHost:
+    def __init__(self, transport: HostTransport,
+                 store: Optional[ResultStore] = None,
+                 timeout_s: float = 600.0,
+                 max_retries: int = 2,
+                 poll_s: float = 0.05):
+        self.transport = transport
+        self.store = store if store is not None else ResultStore()
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.poll_s = poll_s
+        self.quarantined: set = set()
+
+    # -- Algorithm 1, JHOST procedure -----------------------------------------
+    def explore(self, search: SearchAlgorithm, arch: str, shape: str,
+                n_samples: int,
+                objectives: Sequence[str] = ("time_s", "power_w"),
+                progress: bool = False) -> ResultStore:
+        ids = itertools.count()
+        free: List[int] = [c for c in self.transport.client_ids()]
+        inflight: Dict[int, dict] = {}   # config_id -> {tc, client, deadline, retries}
+        issued = completed = 0
+
+        def dispatch(tc: TestConfig, retries: int):
+            client = free.pop(0)
+            self.transport.push(client, tc.to_wire())
+            inflight[tc.config_id] = {
+                "tc": tc, "client": client,
+                "deadline": time.monotonic() + self.timeout_s,
+                "retries": retries,
+            }
+
+        while completed < n_samples:
+            # fill free clients with fresh asks
+            n_new = min(len(free), n_samples - issued)
+            if n_new > 0:
+                for knobs in search.ask(n_new):
+                    tc = TestConfig(next(ids), arch, shape, knobs)
+                    dispatch(tc, self.max_retries)
+                    issued += 1
+
+            msg = self.transport.pull(self.poll_s)
+            now = time.monotonic()
+
+            if msg is not None:
+                cid = msg["config_id"]
+                info = inflight.pop(cid, None)
+                if info is None:
+                    continue  # late duplicate from a quarantined straggler
+                client = msg.get("client_id", info["client"])
+                if client not in self.quarantined:
+                    free.append(client)
+                rec = ResultRecord.from_wire(msg)
+                self.store.add(rec)
+                completed += 1
+                if rec.status == "ok":
+                    y = np.asarray([rec.metrics[k] for k in objectives], float)
+                    search.tell(rec.knobs, y)
+                if progress and completed % 10 == 0:
+                    print(f"[jhost] {completed}/{n_samples} "
+                          f"(inflight={len(inflight)}, free={len(free)})")
+
+            # straggler sweep
+            for cid, info in list(inflight.items()):
+                if now <= info["deadline"]:
+                    continue
+                del inflight[cid]
+                self.quarantined.add(info["client"])
+                if info["retries"] > 0 and free:
+                    dispatch(info["tc"], info["retries"] - 1)
+                else:
+                    self.store.add(ResultRecord(
+                        config_id=cid, arch=arch, shape=shape,
+                        knobs=info["tc"].knobs, metrics={}, status="timeout",
+                        client_id=info["client"]))
+                    completed += 1
+
+            if not inflight and not free and completed < n_samples:
+                raise RuntimeError("all clients quarantined; exploration stuck")
+        return self.store
+
+    def stop_clients(self) -> None:
+        for c in self.transport.client_ids():
+            try:
+                self.transport.push(c, {"cmd": "stop"})
+            except Exception:
+                pass

@@ -1,0 +1,101 @@
+"""JMeasure — metric measurement (paper §III).
+
+Abstract exactly as in the paper so users plug custom measurement functions;
+the bundled implementations are the TPU adaptation of JTime / JPower /
+JMemory.  On Jetson these read wall-clocks and INA power rails; on this
+CPU-only container they evaluate the calibrated analytic model over the
+compiled XLA artifact (DESIGN.md §2).  On a real TPU fleet the same ABC takes
+wall-clock / power-rail plugins without touching JHost/JClient/search code.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict
+
+from repro.roofline.analysis import Artifact
+from repro.roofline.hw import HwModel
+
+
+class JMeasure(abc.ABC):
+    """One metric.  ``measure`` maps (artifact, hw model, workload meta) → dict."""
+
+    name: str = "measure"
+
+    @abc.abstractmethod
+    def measure(self, art: Artifact, hw: HwModel, meta: Dict) -> Dict[str, float]:
+        ...
+
+
+class JTime(JMeasure):
+    """Roofline-estimated execution time.
+
+    For generation workloads (the paper's Llama/LLaVA experiments) meta may
+    carry ``n_decode_tokens`` and a separate decode artifact; total time is
+    t_prefill + n_tokens · t_decode, matching the paper's end-to-end latency.
+    """
+
+    name = "time"
+
+    def measure(self, art: Artifact, hw: HwModel, meta: Dict) -> Dict[str, float]:
+        terms = hw.roofline_terms(art.global_flops,
+                                  art.effective_bytes_per_device * art.n_devices,
+                                  art.wire_bytes_per_device * art.n_devices)
+        out = {"time_s": terms["step_time_s"],
+               "compute_s": terms["compute_s"],
+               "memory_s": terms["memory_s"],
+               "collective_s": terms["collective_s"],
+               "bottleneck": terms["dominant"]}
+        dec = meta.get("decode_artifact")
+        if dec is not None:
+            n_tok = int(meta.get("n_decode_tokens", 0))
+            dterms = hw.roofline_terms(dec.global_flops,
+                                       dec.effective_bytes_per_device * dec.n_devices,
+                                       dec.wire_bytes_per_device * dec.n_devices)
+            out["decode_step_s"] = dterms["step_time_s"]
+            out["time_s"] = out["time_s"] + n_tok * dterms["step_time_s"]
+        n_steps = int(meta.get("n_steps", 0))
+        if n_steps:
+            out["total_s"] = out["time_s"] * n_steps
+        return out
+
+
+class JPower(JMeasure):
+    name = "power"
+
+    def measure(self, art: Artifact, hw: HwModel, meta: Dict) -> Dict[str, float]:
+        terms = hw.roofline_terms(art.global_flops,
+                                  art.effective_bytes_per_device * art.n_devices,
+                                  art.wire_bytes_per_device * art.n_devices)
+        t = terms["step_time_s"]
+        p = hw.power_w(art.global_flops, art.effective_bytes_per_device * art.n_devices, t)
+        out = {"power_w": p, "energy_j": p * hw.n_chips * t}
+        dec = meta.get("decode_artifact")
+        if dec is not None:
+            n_tok = int(meta.get("n_decode_tokens", 0))
+            dterms = hw.roofline_terms(dec.global_flops,
+                                       dec.effective_bytes_per_device * dec.n_devices,
+                                       dec.wire_bytes_per_device * dec.n_devices)
+            td = dterms["step_time_s"]
+            pd = hw.power_w(dec.global_flops,
+                            dec.effective_bytes_per_device * dec.n_devices, td)
+            tot_t = t + n_tok * td
+            tot_e = p * hw.n_chips * t + pd * hw.n_chips * n_tok * td
+            out = {"power_w": tot_e / (hw.n_chips * tot_t), "energy_j": tot_e}
+        return out
+
+
+class JMemory(JMeasure):
+    name = "memory"
+
+    HBM_BYTES = 16 * 1024 ** 3  # v5e per-chip HBM
+
+    def measure(self, art: Artifact, hw: HwModel, meta: Dict) -> Dict[str, float]:
+        peak = art.peak_memory_per_device
+        dec = meta.get("decode_artifact")
+        if dec is not None:
+            peak = max(peak, dec.peak_memory_per_device)
+        return {"mem_bytes": float(peak),
+                "fits_hbm": float(peak <= self.HBM_BYTES)}
+
+
+DEFAULT_MEASURES = (JTime(), JPower(), JMemory())

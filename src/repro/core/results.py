@@ -1,0 +1,124 @@
+"""Result store + CSV export + Pareto utilities (paper §III "utility
+functions such as saving the explored search space in CSV format")."""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ResultRecord:
+    config_id: int
+    arch: str
+    shape: str
+    knobs: Dict[str, Any]
+    metrics: Dict[str, float]
+    status: str = "ok"            # ok | failed | timeout
+    client_id: int = -1
+    cached: bool = False
+    wall_s: float = 0.0
+
+    def to_wire(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_wire(d: dict) -> "ResultRecord":
+        return ResultRecord(**d)
+
+
+def nondominated_mask(points: np.ndarray) -> np.ndarray:
+    """points (N, M), minimisation.  True where no other point dominates."""
+    n = len(points)
+    mask = np.ones(n, bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominates = np.all(points <= points[i], axis=1) & np.any(points < points[i], axis=1)
+        if np.any(dominates):
+            mask[i] = False
+    return mask
+
+
+class ResultStore:
+    def __init__(self, csv_path: Optional[str] = None):
+        self.records: List[ResultRecord] = []
+        self._csv_path = csv_path
+        self._lock = threading.Lock()
+        self._csv_file = None
+        self._csv_writer = None
+
+    def add(self, rec: ResultRecord) -> None:
+        with self._lock:
+            self.records.append(rec)
+            if self._csv_path:
+                self._append_csv(rec)
+
+    # -- CSV ---------------------------------------------------------------
+    def _fieldnames(self, rec: ResultRecord) -> List[str]:
+        return (["config_id", "arch", "shape", "status", "client_id", "cached",
+                 "wall_s"]
+                + [f"knob.{k}" for k in sorted(rec.knobs)]
+                + [f"metric.{k}" for k in sorted(rec.metrics)])
+
+    def _flatten(self, rec: ResultRecord) -> Dict[str, Any]:
+        row = {"config_id": rec.config_id, "arch": rec.arch, "shape": rec.shape,
+               "status": rec.status, "client_id": rec.client_id,
+               "cached": rec.cached, "wall_s": round(rec.wall_s, 4)}
+        row.update({f"knob.{k}": v for k, v in rec.knobs.items()})
+        row.update({f"metric.{k}": v for k, v in rec.metrics.items()})
+        return row
+
+    def _append_csv(self, rec: ResultRecord) -> None:
+        new = not os.path.exists(self._csv_path) or os.path.getsize(self._csv_path) == 0
+        if self._csv_writer is None:
+            os.makedirs(os.path.dirname(self._csv_path) or ".", exist_ok=True)
+            self._csv_file = open(self._csv_path, "a", newline="")
+            self._csv_writer = csv.DictWriter(
+                self._csv_file, fieldnames=self._fieldnames(rec), extrasaction="ignore")
+            if new:
+                self._csv_writer.writeheader()
+        self._csv_writer.writerow(self._flatten(rec))
+        self._csv_file.flush()
+
+    def to_csv(self, path: str) -> None:
+        if not self.records:
+            return
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=self._fieldnames(self.records[0]),
+                               extrasaction="ignore")
+            w.writeheader()
+            for r in self.records:
+                w.writerow(self._flatten(r))
+
+    def to_jsonl(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            for r in self.records:
+                f.write(json.dumps(r.to_wire()) + "\n")
+
+    # -- analysis ------------------------------------------------------------
+    def ok_records(self) -> List[ResultRecord]:
+        return [r for r in self.records if r.status == "ok"]
+
+    def objective_matrix(self, keys: Sequence[str]) -> np.ndarray:
+        return np.asarray([[r.metrics[k] for k in keys] for r in self.ok_records()])
+
+    def pareto_front(self, keys: Sequence[str]) -> List[ResultRecord]:
+        recs = self.ok_records()
+        if not recs:
+            return []
+        pts = self.objective_matrix(keys)
+        mask = nondominated_mask(pts)
+        return [r for r, m in zip(recs, mask) if m]
+
+    def close(self) -> None:
+        if self._csv_file:
+            self._csv_file.close()
+            self._csv_file = self._csv_writer = None

@@ -1,0 +1,42 @@
+"""SearchAlgorithm ABC — the plug-in point for "any search tool" (paper §I).
+
+ask/tell protocol: ``ask(n)`` returns up to n knob dicts to evaluate (batched,
+so multi-client JHosts keep every board busy); ``tell(knobs, y)`` reports the
+objective vector (always minimised).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.space import DesignSpace
+
+
+class SearchAlgorithm(abc.ABC):
+    def __init__(self, space: DesignSpace, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.history_x: List[Dict] = []
+        self.history_y: List[np.ndarray] = []
+
+    @abc.abstractmethod
+    def ask(self, n: int) -> List[Dict]:
+        ...
+
+    def tell(self, knobs: Dict, y: np.ndarray) -> None:
+        self.history_x.append(dict(knobs))
+        self.history_y.append(np.asarray(y, float))
+
+    # -- helpers -------------------------------------------------------------
+    def _key(self, knobs: Dict) -> tuple:
+        return tuple(sorted((k, str(v)) for k, v in knobs.items()))
+
+    def observed_points(self) -> np.ndarray:
+        return (np.stack([self.space.encode(x) for x in self.history_x])
+                if self.history_x else np.zeros((0, len(self.space.knobs))))
+
+    def observed_values(self) -> np.ndarray:
+        return (np.stack(self.history_y)
+                if self.history_y else np.zeros((0, 0)))

@@ -1,0 +1,185 @@
+"""Gaussian-process Bayesian optimisation (paper refs [2], [6], [8]).
+
+Multi-objective handling à la ParEGO: each ask draws a random weight vector,
+scalarises observed objectives with the augmented Tchebycheff norm, fits a GP
+on the normalised ordinal encoding, and maximises Expected Improvement over a
+random candidate pool (discrete spaces make gradient ascent pointless).  An
+EHVI-greedy variant is also provided: candidates are scored by the exact 2-D
+hypervolume improvement of the GP posterior mean.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.search.base import SearchAlgorithm
+from repro.core.search.hypervolume import hypervolume_2d
+from repro.core.results import nondominated_mask
+
+
+class GP:
+    """Tiny RBF-kernel GP with observation noise (pure numpy)."""
+
+    def __init__(self, lengthscale: float = 0.3, noise: float = 1e-3,
+                 signal: float = 1.0):
+        self.ls = lengthscale
+        self.noise = noise
+        self.signal = signal
+        self._x: Optional[np.ndarray] = None
+
+    def _k(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        d2 = np.sum((a[:, None, :] - b[None, :, :]) ** 2, -1)
+        return self.signal * np.exp(-0.5 * d2 / self.ls ** 2)
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "GP":
+        self._x = x
+        self._ym = float(np.mean(y))
+        self._ys = float(np.std(y)) or 1.0
+        yn = (y - self._ym) / self._ys
+        k = self._k(x, x) + self.noise * np.eye(len(x))
+        self._l = np.linalg.cholesky(k)
+        self._alpha = np.linalg.solve(self._l.T, np.linalg.solve(self._l, yn))
+        return self
+
+    def predict(self, xs: np.ndarray):
+        ks = self._k(xs, self._x)
+        mu = ks @ self._alpha
+        v = np.linalg.solve(self._l, ks.T)
+        var = np.clip(self.signal - np.sum(v * v, axis=0), 1e-9, None)
+        return mu * self._ys + self._ym, np.sqrt(var) * self._ys
+
+
+def expected_improvement(mu: np.ndarray, sigma: np.ndarray, best: float) -> np.ndarray:
+    from scipy.stats import norm
+
+    z = (best - mu) / sigma
+    return (best - mu) * norm.cdf(z) + sigma * norm.pdf(z)
+
+
+class BayesOpt(SearchAlgorithm):
+    def __init__(self, space, seed: int = 0, n_init: int = 12,
+                 pool_size: int = 512, strategy: str = "parego"):
+        super().__init__(space, seed)
+        self.n_init = n_init
+        self.pool_size = pool_size
+        assert strategy in ("parego", "ehvi")
+        self.strategy = strategy
+        self._seen = set()
+
+    def _pool(self) -> List[Dict]:
+        pool, keys = [], set()
+        while len(pool) < self.pool_size:
+            c = self.space.sample(self.rng)
+            k = self._key(c)
+            if k in keys or k in self._seen:
+                continue
+            keys.add(k)
+            pool.append(c)
+        return pool
+
+    def _scalarise(self, ys: np.ndarray) -> np.ndarray:
+        lo, hi = ys.min(0), ys.max(0)
+        z = (ys - lo) / np.where(hi - lo > 0, hi - lo, 1.0)
+        w = self.rng.dirichlet(np.ones(ys.shape[1]))
+        return np.max(w * z, axis=1) + 0.05 * np.sum(w * z, axis=1)
+
+    def ask(self, n: int) -> List[Dict]:
+        out: List[Dict] = []
+        ys = self.observed_values()
+        if len(self.history_x) < self.n_init:
+            while len(out) < n:
+                c = self.space.sample(self.rng)
+                if self._key(c) not in self._seen:
+                    self._seen.add(self._key(c))
+                    out.append(c)
+            return out
+
+        xs = self.observed_points()
+        pool = self._pool()
+        xp = np.stack([self.space.encode(c) for c in pool])
+        for _ in range(n):
+            if self.strategy == "parego" or ys.shape[1] != 2:
+                s = self._scalarise(ys)
+                gp = GP().fit(xs, s)
+                mu, sig = gp.predict(xp)
+                score = expected_improvement(mu, sig, float(np.min(s)))
+            else:  # ehvi-greedy on posterior means
+                mus = []
+                for j in range(ys.shape[1]):
+                    mu, _ = GP().fit(xs, ys[:, j]).predict(xp)
+                    mus.append(mu)
+                mus = np.stack(mus, axis=1)
+                ref = ys.max(0) * 1.1 + 1e-9
+                base = hypervolume_2d(ys, ref)
+                score = np.asarray([
+                    hypervolume_2d(np.vstack([ys, m[None]]), ref) - base
+                    for m in mus])
+            order = np.argsort(-score)
+            for i in order:
+                if self._key(pool[i]) not in self._seen:
+                    self._seen.add(self._key(pool[i]))
+                    out.append(pool[i])
+                    break
+            else:
+                out.append(self.space.sample(self.rng))
+        return out
+
+
+class PAL(SearchAlgorithm):
+    """ε-PAL-lite (Zuluaga et al., ICML 2013 — the paper's reference [4]):
+    GP per objective; sample the candidate whose posterior uncertainty is
+    largest among points that could still be Pareto-optimal."""
+
+    def __init__(self, space, seed: int = 0, n_init: int = 12,
+                 pool_size: int = 512, beta: float = 1.8):
+        super().__init__(space, seed)
+        self.n_init = n_init
+        self.pool_size = pool_size
+        self.beta = beta
+        self._seen = set()
+
+    def ask(self, n: int) -> List[Dict]:
+        out: List[Dict] = []
+        ys = self.observed_values()
+        if len(self.history_x) < self.n_init:
+            while len(out) < n:
+                c = self.space.sample(self.rng)
+                if self._key(c) not in self._seen:
+                    self._seen.add(self._key(c))
+                    out.append(c)
+            return out
+
+        xs = self.observed_points()
+        pool, keys = [], set()
+        while len(pool) < self.pool_size:
+            c = self.space.sample(self.rng)
+            k = self._key(c)
+            if k not in keys and k not in self._seen:
+                keys.add(k)
+                pool.append(c)
+        xp = np.stack([self.space.encode(c) for c in pool])
+        mus, sigs = [], []
+        for j in range(ys.shape[1]):
+            mu, sig = GP().fit(xs, ys[:, j]).predict(xp)
+            mus.append(mu)
+            sigs.append(sig)
+        mu = np.stack(mus, 1)
+        sig = np.stack(sigs, 1)
+        lcb = mu - self.beta * sig
+        # potentially Pareto-optimal = optimistic value not dominated by any
+        # observed point
+        maybe = np.asarray([
+            not np.any(np.all(ys <= l, axis=1) & np.any(ys < l, axis=1))
+            for l in lcb])
+        width = np.sum(sig, axis=1) * np.where(maybe, 1.0, 0.05)
+        for i in np.argsort(-width):
+            if len(out) >= n:
+                break
+            if self._key(pool[i]) in self._seen:
+                continue
+            self._seen.add(self._key(pool[i]))
+            out.append(pool[i])
+        while len(out) < n:
+            out.append(self.space.sample(self.rng))
+        return out

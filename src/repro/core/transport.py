@@ -1,0 +1,162 @@
+"""Host↔client communication (paper §III).
+
+The paper uses ZMQ PUSH/PULL socket pairs ("each socket has a certain job"):
+the host PUSHes testConfigs to each client's PULL socket and PULLs results
+that clients PUSH back.  ``ZmqHostTransport``/``ZmqClientTransport`` keep that
+protocol verbatim over TCP (the paper's SSH tunnelling removes the same-subnet
+requirement on real fleets; out of scope in this container, see DESIGN.md §2).
+
+``LoopbackPair`` is an in-process queue transport with the same interface so
+unit tests and single-process exploration need no sockets.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+from typing import Dict, List, Optional
+
+
+class HostTransport:
+    def push(self, client_id: int, msg: dict) -> None:
+        raise NotImplementedError
+
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        raise NotImplementedError
+
+    def client_ids(self) -> List[int]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class ClientTransport:
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        raise NotImplementedError
+
+    def push(self, msg: dict) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# ZMQ (paper-faithful)
+# ---------------------------------------------------------------------------
+
+
+class ZmqHostTransport(HostTransport):
+    """Host: one PUSH socket per client + one bound PULL for results."""
+
+    def __init__(self, result_bind: str, client_endpoints: Dict[int, str]):
+        import zmq
+
+        self._ctx = zmq.Context.instance()
+        self._pull = self._ctx.socket(zmq.PULL)
+        self._pull.bind(result_bind)
+        self._push = {}
+        for cid, ep in client_endpoints.items():
+            s = self._ctx.socket(zmq.PUSH)
+            s.setsockopt(zmq.LINGER, 0)
+            s.connect(ep)
+            self._push[cid] = s
+
+    def push(self, client_id: int, msg: dict) -> None:
+        self._push[client_id].send_json(msg)
+
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        import zmq
+
+        if self._pull.poll(int(timeout_s * 1000), zmq.POLLIN):
+            return self._pull.recv_json()
+        return None
+
+    def client_ids(self) -> List[int]:
+        return sorted(self._push)
+
+    def close(self) -> None:
+        for s in self._push.values():
+            s.close(0)
+        self._pull.close(0)
+
+
+class ZmqClientTransport(ClientTransport):
+    """Client: bound PULL for configs + PUSH connected to the host."""
+
+    def __init__(self, config_bind: str, result_endpoint: str):
+        import zmq
+
+        self._ctx = zmq.Context.instance()
+        self._pull = self._ctx.socket(zmq.PULL)
+        self._pull.bind(config_bind)
+        self._push = self._ctx.socket(zmq.PUSH)
+        self._push.setsockopt(zmq.LINGER, 0)
+        self._push.connect(result_endpoint)
+
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        import zmq
+
+        if self._pull.poll(int(timeout_s * 1000), zmq.POLLIN):
+            return self._pull.recv_json()
+        return None
+
+    def push(self, msg: dict) -> None:
+        self._push.send_json(msg)
+
+    def close(self) -> None:
+        self._pull.close(0)
+        self._push.close(0)
+
+
+# ---------------------------------------------------------------------------
+# In-process loopback (tests / single-process exploration)
+# ---------------------------------------------------------------------------
+
+
+class LoopbackPair:
+    """Queues shared by a LoopbackHost and its LoopbackClients."""
+
+    def __init__(self, n_clients: int):
+        self.to_client = {i: queue.Queue() for i in range(n_clients)}
+        self.to_host: "queue.Queue" = queue.Queue()
+
+    def host(self) -> "LoopbackHostTransport":
+        return LoopbackHostTransport(self)
+
+    def client(self, client_id: int) -> "LoopbackClientTransport":
+        return LoopbackClientTransport(self, client_id)
+
+
+class LoopbackHostTransport(HostTransport):
+    def __init__(self, pair: LoopbackPair):
+        self._pair = pair
+
+    def push(self, client_id: int, msg: dict) -> None:
+        # round-trip through JSON to keep wire-format parity with ZMQ
+        self._pair.to_client[client_id].put(json.dumps(msg))
+
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        try:
+            return json.loads(self._pair.to_host.get(timeout=timeout_s))
+        except queue.Empty:
+            return None
+
+    def client_ids(self) -> List[int]:
+        return sorted(self._pair.to_client)
+
+
+class LoopbackClientTransport(ClientTransport):
+    def __init__(self, pair: LoopbackPair, client_id: int):
+        self._pair = pair
+        self._cid = client_id
+
+    def pull(self, timeout_s: float) -> Optional[dict]:
+        try:
+            return json.loads(self._pair.to_client[self._cid].get(timeout=timeout_s))
+        except queue.Empty:
+            return None
+
+    def push(self, msg: dict) -> None:
+        self._pair.to_host.put(json.dumps(msg))

@@ -1,0 +1,122 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Causal (optionally sliding-window) GQA attention with online softmax.
+
+Tiling: grid = (B·H, n_q_blocks, n_kv_blocks); the kv axis is the minor
+(sequential) grid dimension, so the online-softmax running state (m, l, acc)
+lives in VMEM scratch and is carried across kv iterations for a fixed q block.
+Block shapes are (block_q × d_head) for Q/O and (block_kv × d_head) for K/V —
+MXU-aligned when block sizes and d_head are multiples of 128 (d_head=64 archs
+still lower; the compiler pads lanes).
+
+VMEM working set per program ≈ (2·block_q·d + 2·block_kv·d + block_q·block_kv)
+× 4 B — asserted against a 16 MiB budget in ``ops.flash_attention``.
+
+GQA is expressed in the K/V index maps (q-head → kv-head is h // n_rep), so
+K/V blocks are fetched once per kv head group without materialising the
+head-repeated tensors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, block_q, block_kv, seq_len_q,
+                  seq_len_kv, n_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Block-level reachability: causal ⇒ kv block must start at/before the last
+    # q row; window ⇒ kv block must end after the first q row's window start.
+    needed = k_start < seq_len_kv
+    if causal:
+        needed &= k_start <= q_start + block_q - 1
+    if window:
+        needed &= (k_start + block_kv - 1) >= (q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                      # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bkv)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = cols < seq_len_kv
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, block_q=256,
+                        block_kv=256, interpret=False):
+    """q: (BH, Sq, d) flattened over q heads; k, v: (BHkv, Skv, d).
+
+    BH must be a multiple of BHkv (GQA).  Returns o: (BH, Sq, d).
+    Sq/Skv need not be block multiples (padded internally by the caller).
+    """
+    bh, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    assert bh % bhkv == 0
+    n_rep = bh // bhkv
+    nq = sq // block_q
+    nk = skv // block_kv
+    assert sq % block_q == 0 and skv % block_kv == 0
+
+    kernel = functools.partial(
+        _flash_kernel, scale=d ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_len_q=sq, seq_len_kv=skv,
+        n_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, n_rep=n_rep: (b // n_rep, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, n_rep=n_rep: (b // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the test-suite ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Sq, H, d); k, v: (B, Skv, Hkv, d) -> (B, Sq, H, d)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    n_rep = h // hkv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * d ** -0.5
+    iq = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned if sq < skv
+    ik = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= (iq - ik) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, a_log, b, c, dt):
+    """Sequential (non-chunked) SSD recurrence — the slowest, clearest oracle.
+
+    x: (B,S,H,P); a_log, dt: (B,S,H); b, c: (B,S,N).
+    Returns (y (B,S,H,P), state (B,H,P,N) fp32).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, at, bt, ct, dtt = inp
+        decay = jnp.exp(at.astype(jnp.float32))                       # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32), dtt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (x.swapaxes(0, 1), a_log.swapaxes(0, 1), b.swapaxes(0, 1),
+          c.swapaxes(0, 1), dt.swapaxes(0, 1))
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), state
+
+
+def topk_gating_ref(logits, k):
+    """logits: (T, E) -> (top_p (T,k) fp32, top_ids (T,k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)
+    return top_p, top_ids.astype(jnp.int32)

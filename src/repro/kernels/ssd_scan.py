@@ -1,0 +1,99 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+grid = (B, H, n_chunks); the chunk axis is the minor (sequential) grid
+dimension, so the (P × N) per-head SSM state lives in VMEM scratch and is
+carried across chunk iterations — the inter-chunk recurrence costs no HBM
+round-trips.  Each program computes one chunk of one head:
+
+  intra-chunk:  Y += tril((C·Bᵀ) ∘ exp(cum_i − cum_j) ∘ dt_j) @ X   (MXU matmuls)
+  state-in:     Y += (C @ stateᵀ) ∘ exp(cum)
+  state-out:    state = state·exp(total) + (X ∘ dt·exp(total−cum))ᵀ @ B
+
+VMEM per program ≈ (Q·P + 2·Q·N + Q·Q + P·N) × 4 B; with Q=256, P=64, N=128
+that is ~0.6 MiB — far under budget, so chunks can be widened via the JConfig
+``ssd_chunk`` knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, dt_ref, y_ref, state_ref,
+                state_scr, *, n_chunks, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    bb = b_ref[0].astype(jnp.float32)              # (Q, N)
+    cc = c_ref[0].astype(jnp.float32)              # (Q, N)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+
+    cum = jnp.cumsum(a)                            # (Q,)
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)     # (Q, Q)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    sm = jnp.where(cols <= rows, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(sm, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)      # (Q, P)
+
+    state = state_scr[...]                         # (P, N)
+    y += jax.lax.dot_general(cc, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+
+    total = cum[-1]
+    rem = jnp.exp(total - cum)                     # (Q,)
+    dx = x * (dt * rem)[:, None]                   # (Q, P)
+    new_state = state * jnp.exp(total) + jax.lax.dot_general(
+        dx, bb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0] = new_state
+
+
+def ssd_scan_fwd(x, a_log, b, c, dt, *, chunk=256, interpret=False):
+    """x: (B,S,H,P); a_log, dt: (B,S,H); b, c: (B,S,N).  S % chunk == 0.
+
+    Returns (y (B,S,H,P), state (B,H,P,N) fp32).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a_log, b, c, dt)

@@ -1,0 +1,56 @@
+"""Fused MoE router gating — Pallas TPU kernel.
+
+softmax over expert logits + iterative top-k selection in one VMEM-resident
+pass over a (block_t × E) tile.  Avoids the XLA lowering of lax.top_k (full
+sort) for the small k (≤ 8) used by the assigned MoE archs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gating_kernel(logits_ref, p_ref, id_ref, *, k, n_experts):
+    x = logits_ref[...].astype(jnp.float32)                  # (T, E)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    work = probs
+    for i in range(k):  # k is small & static: unrolled argmax-and-mask
+        top = jnp.max(work, axis=-1)                          # (T,)
+        is_top = work == top[:, None]
+        # break ties toward the smallest expert index
+        idx = jnp.min(jnp.where(is_top, cols, n_experts), axis=-1)
+        p_ref[:, i] = top
+        id_ref[:, i] = idx.astype(jnp.int32)
+        work = jnp.where(cols == idx[:, None], -1.0, work)
+
+
+def topk_gating_fwd(logits, k, *, block_t=1024, interpret=False):
+    """logits: (T, E) fp32 -> (top_p (T,k) fp32, top_ids (T,k) int32)."""
+    t, e = logits.shape
+    pad = (-t) % block_t
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    tp = t + pad
+    kernel = functools.partial(_gating_kernel, k=k, n_experts=e)
+    p, ids = pl.pallas_call(
+        kernel,
+        grid=(tp // block_t,),
+        in_specs=[pl.BlockSpec((block_t, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, k), jnp.float32),
+            jax.ShapeDtypeStruct((tp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return p[:t], ids[:t]

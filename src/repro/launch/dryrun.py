@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun``.
+The XLA_FLAGS line above executes before any jax import (jax locks the device
+count on first init); this module must therefore be imported before jax in
+this process.
+
+Per cell:
+  * full-depth ``.lower().compile()`` on the production mesh — the
+    compile-feasibility proof; ``memory_analysis()`` proves (or disproves)
+    HBM fit;
+  * two shallow UNROLLED builds (1× and 2× the layer pattern) whose exact
+    cost delta gives per-group FLOPs/bytes/collective-wire-bytes; totals are
+    extrapolated c1 + (G-1)·(c2-c1) because XLA cost analysis counts a
+    lax.scan (while-loop) body once regardless of trip count (verified).
+    G = n_layers / len(pattern), fractional for remainder layers (gemma3's
+    62 = 10·6+2 — documented approximation).
+
+Results stream to a JSONL (resumable: existing cells are skipped).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def parse_args():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all", help="arch id, csv, or 'all'")
+    p.add_argument("--shape", default="all", help="shape name, csv, or 'all'")
+    p.add_argument("--mesh", default="single,multi")
+    p.add_argument("--out", default="results/dryrun.jsonl")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--flags", default="", help="k=v csv of BuildFlags overrides")
+    p.add_argument("--variant", default="baseline", help="label for §Perf runs")
+    p.add_argument("--skip-costs", action="store_true",
+                   help="full compile only (no shallow cost builds)")
+    return p.parse_args()
+
+
+def build_flags_from(s: str):
+    from repro.models.model import BuildFlags
+
+    kw = {}
+    if s:
+        for kv in s.split(","):
+            k, v = kv.split("=")
+            field = {f.name: f for f in dataclasses.fields(BuildFlags)}[k]
+            if field.type in ("bool", bool):
+                kw[k] = v.lower() in ("1", "true", "yes")
+            elif field.type in ("int", int):
+                kw[k] = int(v)
+            else:
+                kw[k] = v
+    return BuildFlags(**kw)
+
+
+def shallow_arch(arch, k: int):
+    """Depth = k pattern groups (keeps first_k_dense deviance for k≥1)."""
+    return dataclasses.replace(arch, n_layers=k * len(arch.pattern),
+                               name=f"{arch.name}@depth{k}")
+
+
+def measure_cell(arch, shape, mesh, flags, skip_costs=False):
+    """Returns the dry-run record for one cell."""
+    import jax
+
+    from repro.launch.build import build_cell
+    from repro.roofline.analysis import summarize, Artifact
+
+    n_dev = mesh.size
+    t0 = time.time()
+    full = build_cell(arch, shape, mesh, flags)
+    t_compile = time.time() - t0
+    full_art = summarize(full.compiled, n_dev)
+
+    rec = {
+        "arch": arch.name, "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "kind": full.kind,
+        "flags": dataclasses.asdict(flags),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "arg_bytes": full_art.arg_bytes,
+            "temp_bytes": full_art.temp_bytes,
+            "output_bytes": full_art.output_bytes,
+            "peak_per_device": full_art.peak_memory_per_device,
+            "fits_16g_hbm": full_art.peak_memory_per_device <= 16 * 2 ** 30,
+        },
+        "meta": full.meta,
+    }
+    if skip_costs:
+        return rec
+
+    # per-layer-type cost extraction: for each distinct LayerSpec, build
+    # 1-layer and 2-layer UNROLLED models; their delta is that layer type's
+    # exact post-optimization cost, and the 1-layer build minus its own delta
+    # is the embed/head/loss base.  total = base + Σ_layers delta(spec).
+    # (Cheaper and more exact than depth-1/depth-2 pattern-group builds for
+    # heterogeneous patterns like jamba's 8-layer group.)
+    sflags = dataclasses.replace(flags, unroll=True)
+    specs = arch.layer_specs()
+    per_spec = {}
+    for sp in dict.fromkeys(specs):  # distinct, order-preserving
+        a1 = dataclasses.replace(arch, n_layers=1, pattern=(sp,),
+                                 first_k_dense=0,
+                                 name=f"{arch.name}@{sp.mixer}-{sp.ffn}x1")
+        a2 = dataclasses.replace(arch, n_layers=2, pattern=(sp,),
+                                 first_k_dense=0,
+                                 name=f"{arch.name}@{sp.mixer}-{sp.ffn}x2")
+        per_spec[sp] = (
+            summarize(build_cell(a1, shape, mesh, sflags).compiled, n_dev),
+            summarize(build_cell(a2, shape, mesh, sflags).compiled, n_dev))
+
+    def get(a, q):
+        if q.startswith("coll:"):
+            return a.collectives.get(q[5:], 0.0)
+        return getattr(a, q)
+
+    def total(q, full_v=0.0):
+        s0 = specs[0]
+        c1, c2 = per_spec[s0]
+        d0 = max(get(c2, q) - get(c1, q), 0.0)
+        base = max(get(c1, q) - d0, 0.0)
+        tot = base
+        for sp in specs:
+            c1s, c2s = per_spec[sp]
+            tot += max(get(c2s, q) - get(c1s, q), 0.0)
+        return max(tot, full_v)
+
+    kinds = set(full_art.collectives)
+    for c1s, c2s in per_spec.values():
+        kinds |= set(c1s.collectives) | set(c2s.collectives)
+    coll = {kk: total(f"coll:{kk}", full_art.collectives.get(kk, 0.0))
+            for kk in kinds}
+    art = Artifact(
+        flops_per_device=total("flops_per_device", full_art.flops_per_device),
+        bytes_per_device=total("bytes_per_device", full_art.bytes_per_device),
+        wire_bytes_per_device=sum(coll.values()),
+        collectives=coll,
+        arg_bytes=full_art.arg_bytes,
+        temp_bytes=full_art.temp_bytes,
+        output_bytes=full_art.output_bytes,
+        n_devices=n_dev,
+    )
+    rec["cost"] = {
+        "flops_per_device": art.flops_per_device,
+        "bytes_per_device": art.bytes_per_device,
+        "wire_bytes_per_device": art.wire_bytes_per_device,
+        "collectives": coll,
+        "method": "per-layer-type delta",
+    }
+    return rec, art
+
+
+def roofline_record(rec, art, arch, shape, flags, mesh):
+    from repro.roofline.hw import HwModel
+    from repro.roofline.traffic import analytic_hbm_bytes_per_device
+    from repro.models.model import count_params_analytic
+    from repro.launch.build import pick_optimizer
+
+    hw = HwModel(n_chips=art.n_devices)
+    # analytic fusion-aware HBM estimate (the CPU backend's 'bytes accessed'
+    # has no TPU fusion model and overstates traffic ~5-10×; both reported)
+    tp = mesh.shape.get("model", 1)
+    dp = art.n_devices // tp
+    _, opt_name = pick_optimizer(arch) if shape.kind == "train" else (None, "none")
+    art.hbm_est_per_device = analytic_hbm_bytes_per_device(
+        arch, shape, flags, art.n_devices, dp, tp, optimizer=opt_name)
+    terms = hw.roofline_terms(art.global_flops,
+                              art.effective_bytes_per_device * art.n_devices,
+                              art.wire_bytes_per_device * art.n_devices)
+    terms_hlo = hw.roofline_terms(art.global_flops,
+                                  art.bytes_per_device * art.n_devices,
+                                  art.wire_bytes_per_device * art.n_devices)
+    n_active = count_params_analytic(arch, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    rec["roofline"] = {
+        **{k: v for k, v in terms.items()},
+        "memory_s_hlo_raw": terms_hlo["memory_s"],
+        "hbm_est_per_device": art.hbm_est_per_device,
+        "model_flops": model_flops,
+        "hlo_flops_global": art.global_flops,
+        "useful_ratio": model_flops / art.global_flops if art.global_flops else 0.0,
+        "roofline_fraction": (terms["compute_s"] / terms["step_time_s"]
+                              if terms["step_time_s"] else 0.0),
+    }
+    return rec
+
+
+def main():
+    args = parse_args()
+    import jax  # noqa: E402  (after XLA_FLAGS)
+
+    from repro.configs import ASSIGNED_ARCHS, SHAPES, get_arch, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    flags = build_flags_from(args.flags)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("variant")))
+                except Exception:
+                    pass
+
+    from repro.launch.mesh import make_mesh_dp_tp
+
+    mesh_objs = {}
+    for m in meshes:
+        if m in ("single", "multi"):
+            mesh_objs[m] = make_production_mesh(multi_pod=(m == "multi"))
+        else:  # "DPxTP" — §Perf mesh-factorisation variants (dp_degree knob)
+            dp, tp = (int(x) for x in m.split("x"))
+            mesh_objs[m] = make_mesh_dp_tp(dp, tp)
+
+    n_ok = n_skip = n_fail = 0
+    with open(args.out, "a") as out:
+        for aname in archs:
+            arch = get_arch(aname)
+            for sname in shapes:
+                shape = SHAPES[sname]
+                runs, why = shape_applicable(arch, shape)
+                for mname, mesh in mesh_objs.items():
+                    mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+                    key = (arch.name, shape.name, mesh_tag, args.variant)
+                    if key in done:
+                        n_skip += 1
+                        continue
+                    if not runs:
+                        rec = {"arch": arch.name, "shape": shape.name,
+                               "mesh": mesh_tag, "variant": args.variant,
+                               "status": "skipped", "reason": why}
+                        out.write(json.dumps(rec) + "\n")
+                        out.flush()
+                        print(f"[skip] {arch.name} × {shape.name} × {mesh_tag}: {why}")
+                        continue
+                    t0 = time.time()
+                    try:
+                        got = measure_cell(arch, shape, mesh, flags,
+                                           skip_costs=args.skip_costs)
+                        if args.skip_costs:
+                            rec = got
+                        else:
+                            rec, art = got
+                            rec = roofline_record(rec, art, arch, shape, flags, mesh)
+                        rec["status"] = "ok"
+                        rec["variant"] = args.variant
+                        n_ok += 1
+                        extra = ""
+                        if "roofline" in rec:
+                            r = rec["roofline"]
+                            extra = (f" dom={r['dominant']}"
+                                     f" step={r['step_time_s']*1e3:.1f}ms"
+                                     f" rf={r['roofline_fraction']:.2f}")
+                        print(f"[ok]   {arch.name} × {shape.name} × {mesh_tag} "
+                              f"({time.time()-t0:.0f}s, "
+                              f"peak={rec['memory']['peak_per_device']/2**30:.1f}GiB)"
+                              + extra)
+                    except Exception:
+                        rec = {"arch": arch.name, "shape": shape.name,
+                               "mesh": mesh_tag, "variant": args.variant,
+                               "status": "failed",
+                               "error": traceback.format_exc(limit=8)}
+                        n_fail += 1
+                        print(f"[FAIL] {arch.name} × {shape.name} × {mesh_tag} "
+                              f"({time.time()-t0:.0f}s)")
+                        print(rec["error"].splitlines()[-1])
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+    print(f"\ndone: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""The JExplore driver: JHost + search algorithm + a real model workload.
+
+Reproduces the paper's experiments on the TPU adaptation:
+
+    PYTHONPATH=src python -m repro.launch.explore \
+        --workload llama2-7b --samples 200 --algorithm random \
+        --clients 2 --out results/llama2_explore.csv
+
+Each "board" is a v5e-8 inference slice (tp=8); the workload is the paper's
+generation task (prompt prefill + 150 greedy decode tokens).  Hardware-ladder
+knobs (clock/HBM/ICI) re-evaluate the analytic JMeasure model against the
+cached compiled artifact — exactly like re-clocking a Jetson without
+redeploying the network; sw knobs recompile (JClient caches by fingerprint).
+
+``--shape train_4k`` etc. switch the workload to a training/prefill/decode
+step of the assigned architectures on a dp×tp slice of the same 8 devices.
+"""
+import argparse
+import threading
+import time
+
+
+def parse_args():
+    p = argparse.ArgumentParser()
+    p.add_argument("--workload", default="llama2-7b", help="arch id")
+    p.add_argument("--shape", default="generate",
+                   help="'generate' (paper workload) or a SHAPES name")
+    p.add_argument("--samples", type=int, default=200)
+    p.add_argument("--algorithm", default="random",
+                   choices=["random", "grid", "nsga2", "bayesopt", "pal"])
+    p.add_argument("--clients", type=int, default=2)
+    p.add_argument("--chips", type=int, default=8, help="chips per board")
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen-tokens", type=int, default=150)
+    p.add_argument("--out", default="results/explore.csv")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--timeout", type=float, default=600.0)
+    return p.parse_args()
+
+
+def make_build_fn(args, jc):
+    """Workload adapter: TestConfig -> (Artifact, meta).  Injected into
+    JClient — 'the workloads can be anything' (paper §III)."""
+    import jax
+
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.build import build_cell, build_generation
+    from repro.launch.mesh import make_mesh_dp_tp
+    from repro.roofline.analysis import summarize
+    from repro.roofline.traffic import analytic_hbm_bytes_per_device
+
+    def build(tc):
+        arch = get_arch(tc.arch)
+        flags = jc.build_flags(tc.knobs)
+        dp, tp = jc.mesh_factors(tc.knobs)
+        mesh = make_mesh_dp_tp(dp, tp)
+        if tc.shape == "generate":
+            from repro.configs.base import ShapeConfig
+
+            pre_cell, dec_cell = build_generation(
+                arch, mesh, flags, batch=1,
+                prompt_len=args.prompt_len,
+                max_len=args.prompt_len + args.gen_tokens + 1)
+            pre = summarize(pre_cell.compiled, mesh.size)
+            dec = summarize(dec_cell.compiled, mesh.size)
+            pre.hbm_est_per_device = analytic_hbm_bytes_per_device(
+                arch, ShapeConfig("p", "prefill", args.prompt_len, 1),
+                flags, mesh.size, dp, tp)
+            dec.hbm_est_per_device = analytic_hbm_bytes_per_device(
+                arch, ShapeConfig("d", "decode",
+                                  args.prompt_len + args.gen_tokens + 1, 1),
+                flags, mesh.size, dp, tp)
+            return pre, {"decode_artifact": dec,
+                         "n_decode_tokens": args.gen_tokens}
+        shape = SHAPES[tc.shape]
+        cell = build_cell(arch, shape, mesh, flags)
+        art = summarize(cell.compiled, mesh.size)
+        art.hbm_est_per_device = analytic_hbm_bytes_per_device(
+            arch, shape, flags, mesh.size, dp, tp,
+            optimizer=cell.meta.get("optimizer", "adamw"))
+        return art, {}
+
+    return build
+
+
+def generation_space(arch, chips):
+    """Knob space for the paper's generation workload (batch=1 ⇒ dp=1)."""
+    from repro.core.space import DesignSpace, Knob, KIND_HW, KIND_SW
+    from repro.roofline import hw as hwmod
+
+    knobs = [
+        Knob("clock_scale", hwmod.CLOCK_LADDER, KIND_HW),
+        Knob("hbm_scale", hwmod.HBM_LADDER, KIND_HW),
+        Knob("ici_scale", hwmod.ICI_LADDER, KIND_HW),
+        Knob("dp_degree", (1,), KIND_SW),
+        Knob("dtype", ("bfloat16",), KIND_SW),
+    ]
+    if arch.n_heads:
+        knobs += [Knob("attn_block_q", (128, 256, 512), KIND_SW),
+                  Knob("attn_block_kv", (128, 256, 512), KIND_SW)]
+    if arch.ssm_state:
+        knobs += [Knob("ssd_chunk", (128, 256, 512), KIND_SW)]
+    return DesignSpace(knobs)
+
+
+def main():
+    args = parse_args()
+    from repro.configs import get_arch, SHAPES
+    from repro.core import (ALGORITHMS, JClient, JConfig, JHost, ResultStore,
+                            transport, tpu_pod_space, hypervolume)
+
+    arch = get_arch(args.workload)
+    if args.shape == "generate":
+        space = generation_space(arch, args.chips)
+    else:
+        space = tpu_pod_space(arch, SHAPES[args.shape], n_chips=args.chips)
+    jc = JConfig(space, n_chips=args.chips)
+    print(f"[explore] space size = {space.size()} "
+          f"({len(space.knobs)} knobs); workload={args.workload}/{args.shape}")
+
+    pair = transport.LoopbackPair(args.clients)
+    build_fn = make_build_fn(args, jc)
+    clients = [JClient(jc, build_fn, transport=pair.client(i), client_id=i)
+               for i in range(args.clients)]
+    threads = [threading.Thread(target=c.serve,
+                                kwargs=dict(poll_s=0.1, idle_limit_s=None),
+                                daemon=True)
+               for c in clients]
+    for t in threads:
+        t.start()
+
+    store = ResultStore(csv_path=args.out)
+    host = JHost(pair.host(), store, timeout_s=args.timeout, poll_s=0.05)
+    algo = ALGORITHMS[args.algorithm](space, seed=args.seed)
+    t0 = time.time()
+    host.explore(algo, args.workload, args.shape, args.samples,
+                 objectives=("time_s", "power_w"), progress=True)
+    host.stop_clients()
+    dt = time.time() - t0
+
+    ok = store.ok_records()
+    pts = store.objective_matrix(["time_s", "power_w"])
+    front = store.pareto_front(["time_s", "power_w"])
+    ref = pts.max(0) * 1.1
+    compiles = sum(c.n_compiled for c in clients)
+    print(f"[explore] {len(ok)} configs in {dt:.1f}s "
+          f"({compiles} compiles, {len(ok)-compiles} cache hits)")
+    print(f"[explore] pareto front size = {len(front)}, "
+          f"hypervolume = {hypervolume(pts, ref):.4g}")
+    print(f"[explore] time range  [{pts[:,0].min():.3f}, {pts[:,0].max():.3f}] s")
+    print(f"[explore] power range [{pts[:,1].min():.1f}, {pts[:,1].max():.1f}] W")
+    print(f"[explore] results -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

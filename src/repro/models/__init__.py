@@ -1,0 +1,1 @@
+from repro.models.model import BuildFlags, Model, count_params_analytic

@@ -1,0 +1,138 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode paths.
+
+The full-sequence path can run through either the XLA einsum implementation or
+the Pallas flash-attention kernel (``repro.kernels``).  The XLA path is the
+default when lowering for the CPU-hosted dry-run (Mosaic kernels only lower on
+real TPU backends); kernel correctness is validated in interpret mode by the
+test suite, and the roofline model accounts for the kernel's VMEM tiling.
+
+Sharding design (see DESIGN.md §6): K/V heads are never repeated — GQA is a
+grouped einsum over a (hkv, rep) split of the q heads, so the partitioner
+never sees a broadcast that breaks propagation.  With SP the attention is
+*sequence-sharded*: q stays seq-sharded on the model axis and the (small,
+GQA) K/V are gathered — balanced for any head count, and the same
+parallelisation the Pallas kernel's grid uses on real TPUs.  Decode attention
+runs against a sequence-sharded KV cache (split-K/flash-decode): per-shard
+partial softmax statistics are combined by XLA with scalar-sized collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, apply_rope, rmsnorm, rmsnorm_init
+
+
+def attn_init(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "wq": _normal(k1, (d, h, dh), dtype),
+        "wk": _normal(k2, (d, hkv, dh), dtype),
+        "wv": _normal(k3, (d, hkv, dh), dtype),
+        "wo": _normal(k4, (h, dh, d), dtype),
+    }
+
+
+def _gqa_attend(q, k, v, scale, mask):
+    """Grouped attention without materialising repeated K/V heads.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh); mask: (Sq, Skv) bool.
+    Returns (B, Sq, H, dh).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    q5 = q.reshape(b, sq, hkv, rep, dh)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", q5, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:                   # (Sq, Skv) shared mask
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v)
+    return o.reshape(b, sq, h, dh)
+
+
+def full_attention(params, x, cfg, *, window=0, positions=None, impl="xla",
+                   attn_block_q=256, attn_block_kv=256, policy=None):
+    """Causal (optionally sliding-window) self attention over the whole seq.
+
+    x: (B, S, D) -> (out (B, S, D), cache {k, v}: (B, S, Hkv, dh))
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache = {"k": k, "v": v}
+    if policy is not None:
+        q = policy.constrain_attn_q(q)
+        k = policy.constrain_attn_kv(k)
+        v = policy.constrain_attn_kv(v)
+
+    if impl == "flash":
+        from repro.kernels import ops
+
+        o = ops.flash_attention(
+            q, k, v, causal=True, window=window,
+            block_q=attn_block_q, block_kv=attn_block_kv,
+        )
+    else:
+        idx_q = jnp.arange(s)[:, None]
+        idx_k = jnp.arange(s)[None, :]
+        mask = idx_k <= idx_q
+        if window:
+            mask &= (idx_q - idx_k) < window
+        o = _gqa_attend(q, k, v, cfg.d_head ** -0.5, mask)
+    out = jnp.einsum("bqhk,hkd->bqd", o, params["wo"])
+    return out, cache
+
+
+def decode_attention(params, x, cache, pos, cfg, *, window=0):
+    """One-token decode against a (B, S_max, Hkv, dh) cache.
+
+    x: (B, 1, D); pos: scalar int32 (aligned batch decode).
+    Returns (out (B, 1, D), updated cache).
+    """
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    per_slot = jnp.ndim(pos) > 0        # (B,) positions: continuous batching
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", h, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", h, params["wv"])
+    posb = jnp.broadcast_to(jnp.reshape(jnp.asarray(pos), (-1, 1)), (b, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    if per_slot:
+        # rows write at their own positions: one-hot masked blend (the
+        # aligned fast path below keeps the cheap dynamic_update_slice)
+        onehot = (jnp.arange(s_max)[None, :] == posb)[..., None, None]
+        k_cache = jnp.where(onehot, k_new.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(onehot, v_new.astype(cache["v"].dtype), cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    cache = {"k": k_cache, "v": v_cache}
+
+    idx = jnp.arange(s_max)[None, :]
+    mask = idx <= posb                   # (B, S): per-row causal frontier
+    if window:
+        mask &= (posb - idx) < window
+    mask = mask[:, None, None, None, :]  # (B, 1, 1, 1, S) over (b,k,r,q,s)
+    o = _gqa_attend(q, k_cache, v_cache, cfg.d_head ** -0.5, mask)
+    out = jnp.einsum("bqhk,hkd->bqd", o, params["wo"])
+    return out, cache
+
+
+def empty_cache(cfg, batch, seq_len, dtype):
+    shp = (batch, seq_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}

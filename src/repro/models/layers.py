@@ -1,0 +1,110 @@
+"""Shared NN building blocks (pure JAX, no flax).
+
+Params are plain nested dicts of jnp arrays.  Init functions take an explicit
+PRNG key and return the param subtree; apply functions are pure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _normal(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def gated_rmsnorm(params, x, gate, eps=1e-6):
+    """Mamba-2 style: normalise x * silu(gate)."""
+    return rmsnorm(params, x * jax.nn.silu(gate), eps)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab, d, dtype):
+    return {"table": _normal(key, (vocab, d), dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def lm_head_init(key, d, vocab, dtype):
+    return {"w": _normal(key, (d, vocab), dtype)}
+
+
+def lm_head(params, x):
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": _normal(k1, (d, f), dtype),
+        "wi_up": _normal(k2, (d, f), dtype),
+        "wo": _normal(k3, (f, d), dtype),
+    }
+
+
+def mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head, theta):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                       # (d_head/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits (..., V) float; labels (...) int32.  Mean over all positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

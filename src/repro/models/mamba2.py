@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality) mixer block.
+
+TPU adaptation (DESIGN.md §2): the chunked SSD formulation is used because the
+intra-chunk term is a dense masked matmul (MXU-friendly) and the inter-chunk
+recurrence is a short scan over S/chunk states — unlike the Mamba-1 selective
+scan, which is a length-S sequential elementwise recurrence that maps poorly
+onto systolic hardware.  The intra-chunk compute is also provided as a Pallas
+kernel (``repro.kernels.ssd_scan``); this module is the pure-jnp path and the
+oracle the kernel is tested against.
+
+Sharding co-design (§Perf C): the reference Mamba-2 fuses [z | x | B | C | dt]
+into one ``in_proj`` and one grouped conv.  Slicing that fused output at
+offsets that don't align with tensor-parallel shards forces XLA to all-gather
+the full activation every layer (measured: 94 GiB/device/step on mamba2-780m
+train_4k).  We therefore keep **separate projections per segment** (wz, wx,
+wb, wc, wdt) and **separate depthwise convs** (mathematically identical to
+the fused grouped conv), so every segment is independently TP-sharded and no
+resharding slice ever appears.
+
+Single group (G=1) of B/C heads, as in the released mamba2 configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, gated_rmsnorm, rmsnorm, rmsnorm_init
+
+
+def mamba_init(key, cfg, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "wz": _normal(ks[0], (d, di), dtype),
+        "wx": _normal(ks[1], (d, di), dtype),
+        "wb": _normal(ks[2], (d, n), dtype),
+        "wc": _normal(ks[3], (d, n), dtype),
+        "wdt": _normal(ks[4], (d, h), dtype),
+        "conv_x": _normal(ks[5], (di, cfg.ssm_conv), dtype, scale=0.1),
+        "conv_b": _normal(ks[6], (n, cfg.ssm_conv), dtype, scale=0.1),
+        "conv_c": _normal(ks[0], (n, cfg.ssm_conv), dtype, scale=0.1),
+        "bias_x": jnp.zeros((di,), dtype),
+        "bias_b": jnp.zeros((n,), dtype),
+        "bias_c": jnp.zeros((n,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gated_norm": rmsnorm_init(di, dtype),
+        "out_proj": _normal(ks[1], (di, d), dtype),
+    }
+
+
+def _causal_conv(w, bias, x):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(k):  # K is 4: unrolled shifts beat a conv op on TPU here
+        out = out + pad[:, j : j + x.shape[1], :] * w[None, None, :, j]
+    return out + bias[None, None, :]
+
+
+def ssd_chunked(x, a_log, b, c, dt, chunk, state_init=None, impl="jnp",
+                unroll=False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) head inputs;  a_log: (B, S, H) = dt*A (negative);
+    b, c: (B, S, N);  dt: (B, S, H);  returns (y (B,S,H,P), state (B,H,P,N)).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        return ops.ssd_scan(x, a_log, b, c, dt, chunk=chunk)
+
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if s % chunk:
+        # pad to a chunk multiple: dt=0 kills padded inputs, a_log=0 keeps the
+        # state frozen through the pad, padded outputs are sliced off below.
+        pad = chunk - s % chunk
+        padf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, state = ssd_chunked(padf(x), padf(a_log), padf(b), padf(c),
+                               padf(dt), chunk, state_init=state_init,
+                               impl=impl, unroll=unroll)
+        return y[:, :s], state
+    nc, q = s // chunk, chunk
+
+    # reshape to (nc, B, Q, ...) for scan over chunks
+    def chunked(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac, bc_, cc, dtc = map(chunked, (x, a_log, b, c, dt))
+    if state_init is None:
+        state_init = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        xq, aq, bq, cq, dtq = inp            # (B,Q,H,P), (B,Q,H), (B,Q,N)...
+        aq = aq.astype(jnp.float32)
+        cum = jnp.cumsum(aq, axis=1)                        # (B,Q,H)
+        # intra-chunk: S[i,j] = (c_i . b_j) * exp(cum_i - cum_j) * dt_j,  j <= i
+        cb = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        sm = cb[..., None] * decay * dtq[:, None, :, :]
+        sm = jnp.where(mask[None, :, :, None], sm, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", sm, xq.astype(jnp.float32))
+        # inter-chunk: contribution of the incoming state
+        state_decay = jnp.exp(cum)                          # (B,Q,H)
+        y += jnp.einsum("bin,bhpn,bih->bihp", cq.astype(jnp.float32), state, state_decay)
+        # state update
+        total = cum[:, -1]                                  # (B,H)
+        rem = jnp.exp(total[:, None] - cum)                 # (B,Q,H)
+        dx = xq.astype(jnp.float32) * (dtq * rem)[..., None]  # (B,Q,H,P)
+        new_state = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqhp,bqn->bhpn", dx, bq.astype(jnp.float32)
+        )
+        return new_state, y.astype(x.dtype)
+
+    state, ys = jax.lax.scan(body, state_init, (xc, ac, bc_, cc, dtc),
+                             unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, state
+
+
+def _projections(params, hh):
+    z = jnp.einsum("bsd,de->bse", hh, params["wz"])
+    xs_raw = jnp.einsum("bsd,de->bse", hh, params["wx"])
+    b_raw = jnp.einsum("bsd,de->bse", hh, params["wb"])
+    c_raw = jnp.einsum("bsd,de->bse", hh, params["wc"])
+    dt_raw = jnp.einsum("bsd,de->bse", hh, params["wdt"])
+    return z, xs_raw, b_raw, c_raw, dt_raw
+
+
+def mamba_block(params, x, cfg, impl="jnp", unroll=False):
+    """Full-sequence Mamba-2 block.  x: (B,S,D) -> (out, cache)."""
+    bsz, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    hh = rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xs_raw, b_raw, c_raw, dt_raw = _projections(params, hh)
+    xs = jax.nn.silu(_causal_conv(params["conv_x"], params["bias_x"], xs_raw))
+    b = jax.nn.silu(_causal_conv(params["conv_b"], params["bias_b"], b_raw))
+    c = jax.nn.silu(_causal_conv(params["conv_c"], params["bias_c"], c_raw))
+    xs = xs.reshape(bsz, s, h, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                        # (H,)
+    a_log = dt * a[None, None, :]
+    y, state = ssd_chunked(xs, a_log, b, c, dt, cfg.ssm_chunk, impl=impl,
+                           unroll=unroll)
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, di)
+    y = gated_rmsnorm(params["gated_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    # decode cache: last (ssm_conv-1) pre-conv segment values + final state
+    km1 = cfg.ssm_conv - 1
+    conv_cache = jnp.concatenate(
+        [xs_raw[:, -km1:], b_raw[:, -km1:], c_raw[:, -km1:]], axis=-1)
+    return out, {"state": state, "conv": conv_cache}
+
+
+def mamba_decode(params, x, cache, cfg):
+    """One-token decode.  x: (B,1,D); cache {state (B,H,P,N), conv (B,K-1,C)}."""
+    bsz = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    hh = rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xs_raw, b_raw, c_raw, dt_raw = _projections(params, hh)
+    new_seg = jnp.concatenate([xs_raw, b_raw, c_raw], axis=-1)   # (B,1,C)
+    window = jnp.concatenate([cache["conv"], new_seg], axis=1)   # (B,K,C)
+
+    def seg_conv(w, bias, lo, hi):
+        return jax.nn.silu(
+            jnp.einsum("bkc,ck->bc", window[:, :, lo:hi], w) + bias)
+
+    xs = seg_conv(params["conv_x"], params["bias_x"], 0, di)
+    b = seg_conv(params["conv_b"], params["bias_b"], di, di + n)
+    c = seg_conv(params["conv_c"], params["bias_c"], di + n, di + 2 * n)
+    xs = xs.reshape(bsz, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])                             # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xs, b.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = gated_rmsnorm(params["gated_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    new_conv = jnp.concatenate([cache["conv"][:, 1:], new_seg], axis=1)
+    return out, {"state": state, "conv": new_conv}
+
+
+def empty_mamba_cache(cfg, batch):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), jnp.float32),
+    }

@@ -1,0 +1,194 @@
+"""Model facade: init / train-forward / prefill / decode built from ArchConfig.
+
+``BuildFlags`` carries every knob that changes the lowered HLO (the JConfig
+"software" knob subset); hardware-ladder knobs never reach this layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.layers import embed, lm_head, rmsnorm, softmax_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildFlags:
+    dtype: str = "bfloat16"            # activation/param dtype
+    attn_impl: str = "xla"             # xla | flash (Pallas kernel)
+    ssd_impl: str = "jnp"              # jnp | pallas
+    remat: str = "selective"           # none | selective | full
+    loss_chunks: int = 1               # chunked vocab-CE to cap logits memory
+    attn_block_q: int = 256
+    attn_block_kv: int = 256
+    sp: bool = True                    # sequence-parallel residual stream
+    fsdp: bool = True                  # shard params over data axes too
+    grad_rs: bool = False              # constrain grads to param sharding
+                                       # (reduce-scatter instead of all-reduce)
+    unroll: bool = False               # unroll scans (shallow roofline builds)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def remat_policy(self):
+        if self.remat == "selective":
+            return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return None  # 'full': save nothing
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, flags: BuildFlags = BuildFlags(), policy=None):
+        self.cfg = cfg
+        self.flags = flags
+        self.policy = policy
+
+    # -- params ----------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return transformer.stack_init(rng, self.cfg, self.flags.jdtype)
+
+    def init_shapes(self):
+        """eval_shape of init — no allocation (used by the dry-run)."""
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    # -- embedding of modality inputs -------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        parts = []
+        if cfg.frontend == "vision":
+            img = batch["image_embeds"].astype(self.flags.jdtype)
+            parts.append(jnp.einsum("bfd,de->bfe", img, params["frontend"]["proj"]))
+            parts.append(embed(params["embed"], batch["tokens"]))
+        elif cfg.frontend == "audio":
+            frames = batch["frame_embeds"].astype(self.flags.jdtype)
+            parts.append(jnp.einsum("bfd,de->bfe", frames, params["frontend"]["proj"]))
+        else:
+            parts.append(embed(params["embed"], batch["tokens"]))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        if self.policy is not None:
+            x = self.policy.constrain_residual(x)
+        return x
+
+    def _logits(self, params, hidden):
+        h = rmsnorm(params["final_norm"], hidden, self.cfg.norm_eps)
+        w = params["embed"]["table"].T if self.cfg.tie_embeddings else params["head"]["w"]
+        logits = jnp.einsum("...d,dv->...v", h, w)
+        if self.policy is not None:
+            logits = self.policy.constrain_logits(logits)
+        return logits
+
+    # -- train forward -----------------------------------------------------------
+    def loss_fn(self, params, batch):
+        """batch: tokens/labels (+ frontend embeds).  Returns (loss, metrics)."""
+        x = self._embed_inputs(params, batch)
+        hidden, aux, _ = transformer.forward_full(
+            params, x, self.cfg, self.flags, self.policy, want_cache=False)
+        labels = batch["labels"]
+        mask = (labels >= 0)
+        labels = jnp.maximum(labels, 0)
+        nchunks = self.flags.loss_chunks
+        if nchunks > 1:
+            b, s, _ = hidden.shape
+            assert s % nchunks == 0
+            hs = hidden.reshape(b, nchunks, s // nchunks, -1).swapaxes(0, 1)
+            ls = labels.reshape(b, nchunks, s // nchunks).swapaxes(0, 1)
+            ms = mask.reshape(b, nchunks, s // nchunks).swapaxes(0, 1)
+
+            def chunk_loss(carry, inp):
+                h, l, m = inp
+                lg = self._logits(params, h).astype(jnp.float32)
+                lz = jax.scipy.special.logsumexp(lg, axis=-1)
+                gold = jnp.take_along_axis(lg, l[..., None], axis=-1)[..., 0]
+                return carry + jnp.sum((lz - gold) * m), None
+
+            total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                                    (hs, ls, ms), unroll=self.flags.unroll)
+            ce = total / jnp.maximum(jnp.sum(mask), 1)
+        else:
+            logits = self._logits(params, hidden).astype(jnp.float32)
+            lz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            ce = jnp.sum((lz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- prefill / decode ----------------------------------------------------------
+    def prefill(self, params, batch):
+        """Returns (last-position logits (B, V), caches)."""
+        x = self._embed_inputs(params, batch)
+        hidden, _, caches = transformer.forward_full(
+            params, x, self.cfg,
+            dataclasses.replace(self.flags, remat="none"),
+            self.policy, want_cache=True)
+        logits = self._logits(params, hidden[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens: (B, 1) int32; pos: scalar.  Returns (logits (B, V), caches)."""
+        x = embed(params["embed"], tokens)
+        hidden, caches = transformer.forward_decode(params, x, caches, pos,
+                                                    self.cfg, unroll=self.flags.unroll)
+        return self._logits(params, hidden)[:, 0], caches
+
+    def empty_caches(self, batch, seq_len):
+        return transformer.empty_caches(self.cfg, batch, seq_len, self.flags.jdtype)
+
+    # -- input specs (dry-run stand-ins) ----------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = self.flags.jdtype
+        if shape.kind in ("train", "prefill"):
+            batch: Dict[str, Any] = {}
+            if cfg.frontend == "vision":
+                f = cfg.n_frontend_tokens
+                batch["image_embeds"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), dt)
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - f), i32)
+            elif cfg.frontend == "audio":
+                batch["frame_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return batch
+        # decode: one new token against a seq_len cache
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for 6ND model-FLOPs accounting)
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    d, dh = cfg.d_model, cfg.d_head
+    total = 0
+    for spec in cfg.layer_specs():
+        if spec.mixer in ("attn", "attn_local"):
+            total += d * cfg.n_heads * dh * 2 + d * cfg.n_kv_heads * dh * 2 + d
+        else:
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            total += d * (2 * di + 2 * n + h)          # in_proj
+            total += (di + 2 * n) * (cfg.ssm_conv + 1)  # conv w+b
+            total += 3 * h + di                        # A_log, D, dt_bias, norm
+            total += di * d + d                        # out_proj + norm
+        if spec.ffn == "dense":
+            f = cfg.d_ff if cfg.d_ff else cfg.moe_d_ff
+            total += 3 * d * f + d
+        elif spec.ffn == "moe":
+            e = cfg.moe_top_k if active_only else cfg.n_experts
+            total += 3 * d * cfg.moe_d_ff * e
+            total += d * cfg.n_experts                 # router
+            total += 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+            total += d
+    total += d  # final norm
+    if cfg.frontend:
+        total += d * d
+    # lm head participates in the matmul FLOPs; vocab embedding lookup does not
+    total += d * cfg.vocab_size
+    return total

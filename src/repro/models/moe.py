@@ -1,0 +1,150 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeek-MoE style).
+
+Design (TPU adaptation, see DESIGN.md §6 and EXPERIMENTS.md §Perf):
+  * top-k routing with softmax-renormalised weights over the selected experts;
+  * **group-local dispatch**: tokens are reshaped to (g, T/g, D) where g is
+    the data-parallel degree, and ranks/capacity/scatter are computed within
+    each group.  The expert buffer (g, E, C, D) is sharded
+    P(data, model, None, None), so the dispatch scatter and the per-expert
+    matmuls are entirely device-local — device (i, j) holds group i's tokens
+    for experts e_j and the weights of e_j.  Only the combine (token pulls
+    its k expert outputs across the model axis) moves data, which XLA lowers
+    as partial gathers + an all-reduce of the (g, T/g, D) output.  The naive
+    global scatter-add variant lowers to an all-reduce of the *full* buffer
+    per layer (~2.3 TiB/device/step for deepseek-moe-16b train_4k — measured,
+    see §Perf) and is why group-locality is not optional at 32k context;
+  * capacity is per group (locality-aware drop policy, standard for EP);
+  * optional shared experts (always-on dense branch, DeepSeek convention);
+  * Switch-style load-balance auxiliary loss returned to the caller.
+
+Dropped tokens (over capacity) fall through the residual connection — the
+standard capacity-factor contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, mlp, mlp_init, rmsnorm, rmsnorm_init
+
+
+def moe_init(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "norm": rmsnorm_init(d, dtype),
+        "router": _normal(k1, (d, e), jnp.float32),  # router kept fp32
+        "experts": {
+            "wi_gate": _normal(k2, (e, d, f), dtype),
+            "wi_up": _normal(k3, (e, d, f), dtype),
+            "wo": _normal(k4, (e, f, d), dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(k5, d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def expert_capacity(n_tokens, cfg):
+    c = int(n_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(c, cfg.moe_top_k)
+    return -(-c // 8) * 8  # round up to a multiple of 8 (lane friendliness)
+
+
+def _rank_in_expert(flat_ids, e):
+    """Position of each assignment within its expert's arrival order.
+
+    flat_ids: (A,) int32.  Returns (A,) int32 rank.  O(A log A) via stable sort.
+    """
+    a = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)             # (A,)
+    sorted_ids = flat_ids[order]
+    seg_starts = jnp.searchsorted(sorted_ids, jnp.arange(e))
+    rank_sorted = jnp.arange(a) - seg_starts[sorted_ids]
+    return jnp.zeros((a,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def moe_ffn(params, x, cfg, policy=None):
+    """x: (B, S, D) -> (out, aux_loss).  Routed + shared experts."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    g = 1
+    if policy is not None:
+        g = policy.moe_groups(b)
+        if g > 1:
+            # tokens must be purely batch-sharded for group-local dispatch
+            # (SP seq-sharding is re-established by the residual constraint)
+            x = policy.constrain_tokens_for_moe(x)
+    tl = t // g
+    c = expert_capacity(tl, cfg)
+
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    xt = h.reshape(g, tl, d)
+
+    gate_logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                             params["router"])
+    probs = jax.nn.softmax(gate_logits, axis=-1)            # (g, Tl, E)
+    top_p, top_ids = jax.lax.top_k(probs, k)                # (g, Tl, k)
+    weights = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- load-balance aux loss (Switch): E * <f_e * p_e> ----
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot_sel = jnp.sum(jax.nn.one_hot(top_ids, e, dtype=jnp.float32), axis=2)
+    ce = jnp.mean(one_hot_sel, axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    # ---- group-local rank & slot ----
+    flat_ids = top_ids.reshape(g, tl * k)
+    rank = jax.vmap(lambda ids: _rank_in_expert(ids, e))(flat_ids)
+    rank = rank.reshape(g, tl, k)
+    keep = rank < c
+    slot = jnp.where(keep, top_ids * c + rank, e * c)       # drops -> sentinel
+
+    # ---- dispatch: scatter within each group (device-local) ----
+    # The scatter target must be sharded on the group dim ONLY: with the
+    # (E·C) dim unsharded the scatter is a per-group local op; re-sharding
+    # the result onto the model axis afterwards is a local slice.  Sharding
+    # the buffer over model *before* the scatter makes XLA replicate the
+    # whole buffer per layer (measured: 3.8 TiB/dev all-gather — §Perf A2).
+    buf = jnp.zeros((g, e * c + 1, d), xt.dtype)
+    if policy is not None:
+        buf = policy.constrain_group_local(buf)
+    # vmap over the group dim lowers to a scatter with explicit batch dims,
+    # which the SPMD partitioner partitions along `g`; the two-index-array
+    # form buf.at[gi, slot] defeats it and replicates the buffer (§Perf A3).
+    scatter1 = jax.vmap(lambda bb, idx, upd: bb.at[idx].add(upd))
+    for i in range(k):  # k is small & static
+        contrib = jnp.where(keep[:, :, i, None], xt, jnp.zeros_like(xt))
+        buf = scatter1(buf, slot[:, :, i], contrib)
+    buf = buf[:, : e * c].reshape(g, e, c, d)
+    if policy is not None:
+        buf = policy.constrain_expert_buffer(buf)
+
+    # ---- expert computation (device-local: (data=g, model=e) grid) ----
+    we = params["experts"]
+    gate = jnp.einsum("gecd,edf->gecf", buf, we["wi_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, we["wi_up"])
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, we["wo"])
+    if policy is not None:
+        y = policy.constrain_expert_buffer(y)
+
+    # ---- combine: all-gather the (small) expert outputs over model, then
+    # gather per group locally (predictable 2·E·C·D/g bytes per device) ----
+    y_flat = jnp.concatenate(
+        [y.reshape(g, e * c, d), jnp.zeros((g, 1, d), y.dtype)], axis=1)
+    if policy is not None:
+        y_flat = policy.constrain_group_local(y_flat)
+    out = jnp.zeros((g, tl, d), x.dtype)
+    gather1 = jax.vmap(lambda yf, idx: yf[idx])
+    for i in range(k):
+        gathered = gather1(y_flat, slot[:, :, i])
+        out = out + gathered * (weights[:, :, i, None]
+                                * keep[:, :, i, None]).astype(x.dtype)
+
+    out = out.reshape(b, s, d)
+    if policy is not None:
+        out = policy.constrain_residual(out)
+    if cfg.n_shared_experts:
+        out = out + mlp(params["shared"], h)
+    return out, aux

@@ -1,0 +1,249 @@
+"""Decoder stack: scan over pattern groups, heterogeneous layer support.
+
+The layer list is ``pattern × n_groups (+ remainder)``; the scan body applies
+one pattern group, so HLO size is O(|pattern|) regardless of depth.  Caches
+returned by prefill / consumed by decode are pytrees whose 'scan' leaves carry
+a leading (n_groups,) axis, matching the scanned params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention, mamba2, moe
+from repro.models.layers import (
+    _normal,
+    embed,
+    embedding_init,
+    lm_head,
+    lm_head_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, spec: LayerSpec, cfg: ArchConfig, dtype):
+    km, kf = jax.random.split(key)
+    p: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = attention.attn_init(km, cfg, dtype)
+    else:
+        p["mixer"] = mamba2.mamba_init(km, cfg, dtype)
+    if spec.ffn == "dense":
+        f = cfg.d_ff if cfg.d_ff else cfg.moe_d_ff
+        p["ffn"] = {"norm": rmsnorm_init(cfg.d_model, dtype),
+                    "mlp": mlp_init(kf, cfg.d_model, f, dtype)}
+    elif spec.ffn == "moe":
+        p["ffn"] = moe.moe_init(kf, cfg, dtype)
+    return p
+
+
+def _layer_full(spec, p, x, cfg, flags, policy):
+    """Full-seq layer.  Returns (x, aux, cache)."""
+    window = cfg.sliding_window if spec.mixer == "attn_local" else 0
+    if spec.mixer in ("attn", "attn_local"):
+        h, cache = attention.full_attention(
+            p["mixer"], x, cfg, window=window, impl=flags.attn_impl,
+            attn_block_q=flags.attn_block_q, attn_block_kv=flags.attn_block_kv,
+            policy=policy)
+    else:
+        h, cache = mamba2.mamba_block(p["mixer"], x, cfg, impl=flags.ssd_impl,
+                                      unroll=flags.unroll)
+    x = x + h
+    if policy is not None:
+        x = policy.constrain_residual(x)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "dense":
+        x = x + mlp(p["ffn"]["mlp"], rmsnorm(p["ffn"]["norm"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        y, aux = moe.moe_ffn(p["ffn"], x, cfg, policy)
+        x = x + y
+    if policy is not None:
+        x = policy.constrain_residual(x)
+    return x, aux, cache
+
+
+def _layer_decode(spec, p, x, cache, pos, cfg):
+    window = cfg.sliding_window if spec.mixer == "attn_local" else 0
+    if spec.mixer in ("attn", "attn_local"):
+        h, cache = attention.decode_attention(p["mixer"], x, cache, pos, cfg, window=window)
+    else:
+        h, cache = mamba2.mamba_decode(p["mixer"], x, cache, cfg)
+    x = x + h
+    if spec.ffn == "dense":
+        x = x + mlp(p["ffn"]["mlp"], rmsnorm(p["ffn"]["norm"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        y, _ = moe.moe_ffn(p["ffn"], x, cfg, None)
+        x = x + y
+    return x, cache
+
+
+def _layer_empty_cache(spec, cfg, batch, seq_len, dtype):
+    if spec.mixer in ("attn", "attn_local"):
+        return attention.empty_cache(cfg, batch, seq_len, dtype)
+    return mamba2.empty_mamba_cache(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+
+def _group_layout(cfg: ArchConfig):
+    g = len(cfg.pattern)
+    return cfg.n_layers // g, cfg.n_layers % g  # (n_full_groups, remainder)
+
+
+def stack_init(key, cfg: ArchConfig, dtype):
+    n_groups, rem = _group_layout(cfg)
+    keys = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = lm_head_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend:
+        params["frontend"] = {"proj": _normal(keys[2], (cfg.d_model, cfg.d_model), dtype)}
+
+    specs = cfg.layer_specs()
+
+    def one_group(gkey, group_specs):
+        lkeys = jax.random.split(gkey, len(group_specs))
+        return {f"l{i}": _layer_init(lkeys[i], s, cfg, dtype)
+                for i, s in enumerate(group_specs)}
+
+    if n_groups:
+        gkeys = jax.random.split(keys[3], n_groups)
+        # first_k_dense may make group 0's specs differ from the repeating
+        # pattern; scanned groups must be homogeneous, so groups whose specs
+        # deviate are moved to an unscanned 'head_layers' section.
+        base = tuple(cfg.pattern)
+        deviant = []
+        homog = []
+        for gi in range(n_groups):
+            gspecs = specs[gi * len(base) : (gi + 1) * len(base)]
+            (deviant if tuple(gspecs) != base else homog).append(gi)
+        params["head_layers"] = {
+            f"g{gi}": one_group(gkeys[gi], specs[gi * len(base) : (gi + 1) * len(base)])
+            for gi in deviant
+        }
+        homog_keys = [gkeys[gi] for gi in homog]
+        if homog:
+            params["scan"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[one_group(k, base) for k in homog_keys]
+            )
+    if rem:
+        rkey = jax.random.fold_in(keys[3], 999)
+        params["tail"] = one_group(rkey, specs[-rem:])
+    return params
+
+
+def _sections(cfg):
+    """Yield (section, group_specs, scanned?) in layer order."""
+    n_groups, rem = _group_layout(cfg)
+    specs = cfg.layer_specs()
+    base = tuple(cfg.pattern)
+    out = []
+    deviant = [gi for gi in range(n_groups)
+               if tuple(specs[gi * len(base) : (gi + 1) * len(base)]) != base]
+    for gi in deviant:
+        out.append((f"head_layers/g{gi}", specs[gi * len(base) : (gi + 1) * len(base)], False))
+    n_homog = n_groups - len(deviant)
+    if n_homog:
+        out.append(("scan", base, True))
+    if rem:
+        out.append(("tail", specs[-rem:], False))
+    return out
+
+
+def _get_section(params, name):
+    node = params
+    for part in name.split("/"):
+        node = node[part]
+    return node
+
+
+def forward_full(params, x, cfg, flags, policy, want_cache):
+    """x: (B,S,D) embedded input -> (hidden (B,S,D), aux, caches|None)."""
+    caches: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for name, gspecs, scanned in _sections(cfg):
+        sec = _get_section(params, name)
+        if scanned:
+            def body(carry, gparams):
+                xx, aux = carry
+                gcache = {}
+                for i, s in enumerate(gspecs):
+                    xx, a, c = _layer_full(s, gparams[f"l{i}"], xx, cfg, flags, policy)
+                    aux = aux + a
+                    if want_cache:
+                        gcache[f"l{i}"] = c
+                return (xx, aux), (gcache if want_cache else None)
+
+            if flags.remat != "none":
+                body = jax.checkpoint(body, policy=flags.remat_policy())
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), sec,
+                                              unroll=flags.unroll)
+            if want_cache:
+                caches[name] = ys
+        else:
+            for i, s in enumerate(gspecs):
+                x, a, c = _layer_full(s, sec[f"l{i}"], x, cfg, flags, policy)
+                aux_total = aux_total + a
+                if want_cache:
+                    caches.setdefault(name, {})[f"l{i}"] = c
+    return x, aux_total, (caches if want_cache else None)
+
+
+def forward_decode(params, x, caches, pos, cfg, unroll=False):
+    """x: (B,1,D) -> (hidden (B,1,D), new caches)."""
+    new_caches: Dict[str, Any] = {}
+    for name, gspecs, scanned in _sections(cfg):
+        sec = _get_section(params, name)
+        if scanned:
+            def body(xx, inp):
+                gparams, gcache = inp
+                ncache = {}
+                for i, s in enumerate(gspecs):
+                    xx, ncache[f"l{i}"] = _layer_decode(s, gparams[f"l{i}"], xx, gcache[f"l{i}"], pos, cfg)
+                return xx, ncache
+
+            x, ys = jax.lax.scan(body, x, (sec, caches[name]), unroll=unroll)
+            new_caches[name] = ys
+        else:
+            new_caches[name] = {}
+            for i, s in enumerate(gspecs):
+                x, c = _layer_decode(s, sec[f"l{i}"], x, caches[name][f"l{i}"], pos, cfg)
+                new_caches[name][f"l{i}"] = c
+    return x, new_caches
+
+
+def empty_caches(cfg, batch, seq_len, dtype):
+    out: Dict[str, Any] = {}
+    n_groups, _ = _group_layout(cfg)
+    specs = cfg.layer_specs()
+    base = tuple(cfg.pattern)
+    for name, gspecs, scanned in _sections(cfg):
+        one = {f"l{i}": _layer_empty_cache(s, cfg, batch, seq_len, dtype)
+               for i, s in enumerate(gspecs)}
+        if scanned:
+            n_homog = sum(1 for gi in range(n_groups)
+                          if tuple(specs[gi * len(base) : (gi + 1) * len(base)]) == base)
+            out[name] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (n_homog,) + t.shape), one)
+        else:
+            out[name] = one
+    return out

@@ -1,0 +1,1 @@
+from repro.parallel.sharding import ShardingPolicy

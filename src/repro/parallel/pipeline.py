@@ -1,0 +1,82 @@
+"""Pipeline parallelism: GPipe-style microbatch pipeline over a ``pipe`` mesh
+axis using shard_map + collective_permute.
+
+The production configs default to FSDP+TP (a 256-chip v5e pod favours 2-D
+sharding — see DESIGN.md §6), but PP is a first-class option for meshes where
+a pod axis is better used as a pipeline: stage the layer stack, stream
+microbatches, and rotate activations ring-wise.  Tested on small host meshes
+in tests/test_pipeline.py.
+
+The schedule is the classic GPipe loop unrolled as a lax.scan over
+(n_micro + n_stages - 1) ticks; each tick every stage processes one resident
+microbatch then collective_permutes its output to the next stage.  Bubble
+fraction = (S-1)/(M+S-1), reported by ``bubble_fraction``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(mesh: Mesh, axis: str, stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+                   stage_params: Any, x_micro: jnp.ndarray) -> jnp.ndarray:
+    """Run ``stage_fn`` as a pipeline over ``axis``.
+
+    stage_params: pytree whose leaves carry a leading (n_stages,) axis —
+      stage s uses leaf[s] (sharded onto the pipe axis by shard_map).
+    x_micro: (n_micro, mb, ...) microbatched input, replicated across stages.
+    Returns (n_micro, mb, ...) outputs of the final stage.
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_stage(params, xs):
+        # inside shard_map: params leaves have leading dim 1 (this stage's slice)
+        params = jax.tree.map(lambda l: l[0], params)
+        stage = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        n_ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, inflight = carry
+            # stage 0 injects microbatch t (if still available); others take
+            # the activation handed over from the previous stage.
+            inject = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False)
+            cur = jnp.where(stage == 0, inject, inflight)
+            out = stage_fn(params, cur)
+            # pass to next stage (ring; the wrap-around edge is ignored)
+            nxt = jax.lax.ppermute(
+                out, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # final stage records its finished microbatch m = t - (S-1)
+            m = t - (n_stages - 1)
+            valid = (m >= 0) & (m < n_micro) & (stage == n_stages - 1)
+            buf = jax.lax.cond(
+                valid,
+                lambda b: jax.lax.dynamic_update_index_in_dim(
+                    b, out, jnp.clip(m, 0, n_micro - 1), axis=0),
+                lambda b: b, buf)
+            return (buf, nxt), None
+
+        (buf, _), _ = jax.lax.scan(tick, (buf, jnp.zeros_like(xs[0])),
+                                   jnp.arange(n_ticks))
+        # broadcast final-stage results to all stages so the output is
+        # replicated (masked psum: only the last stage contributes)
+        buf = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, buf, jnp.zeros_like(buf)), axis)
+        return buf
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(spec_params, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(stage_params, x_micro)

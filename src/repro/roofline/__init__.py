@@ -1,0 +1,2 @@
+from repro.roofline.hw import HwModel, PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+from repro.roofline.analysis import Artifact, summarize, roofline_report, collective_wire_bytes

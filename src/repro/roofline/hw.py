@@ -1,0 +1,79 @@
+"""TPU v5e hardware model: roofline constants, DVFS-style ladders, power.
+
+The Jetson-knob analogy (DESIGN.md §2):
+  clock_scale — GPU-frequency ladder (11 steps, like Orin's 306 MHz–1.3 GHz)
+  hbm_scale   — EMC-frequency ladder (4 steps; the lowest step mirrors Orin's
+                204 MHz/3.2 GHz ≈ 1/16 ratio, which produces the paper's
+                detached low-EMC cluster)
+  ici_scale   — interconnect ladder (no Jetson analogue; TPU-specific)
+
+Power model (documented, *modeled* constants — this container cannot measure):
+  P_chip = IDLE_W
+         + COMPUTE_W * clock_scale^2.5 * compute_utilisation
+         + HBM_W     * hbm_scale       * memory_utilisation
+The 2.5 exponent approximates dynamic power ∝ f·V² with V roughly ∝ √f.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# -- TPU v5e per-chip peaks (assignment-specified constants) -----------------
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+PEAK_FLOPS_FP32 = PEAK_FLOPS_BF16 / 4
+HBM_BW = 819e9                 # B/s
+ICI_BW_PER_LINK = 50e9         # B/s per link (formula uses chips × link_bw)
+
+# -- modeled power envelope ---------------------------------------------------
+IDLE_W = 75.0
+COMPUTE_W = 110.0
+HBM_W = 30.0
+
+CLOCK_LADDER = tuple(round(0.5 + 0.05 * i, 2) for i in range(11))  # 0.5 … 1.0
+HBM_LADDER = (1.0 / 16.0, 1.0 / 3.0, 2.0 / 3.0, 1.0)               # EMC analogue
+ICI_LADDER = (0.25, 0.5, 0.75, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HwModel:
+    n_chips: int
+    clock_scale: float = 1.0
+    hbm_scale: float = 1.0
+    ici_scale: float = 1.0
+    dtype: str = "bfloat16"
+
+    @property
+    def peak_flops(self) -> float:
+        base = PEAK_FLOPS_FP32 if self.dtype == "float32" else PEAK_FLOPS_BF16
+        return base * self.clock_scale
+
+    @property
+    def hbm_bw(self) -> float:
+        return HBM_BW * self.hbm_scale
+
+    @property
+    def ici_bw(self) -> float:
+        return ICI_BW_PER_LINK * self.ici_scale
+
+    # -- roofline terms (global quantities in, seconds out) -------------------
+    def roofline_terms(self, flops: float, hbm_bytes: float,
+                       collective_bytes: float) -> dict:
+        t_comp = flops / (self.n_chips * self.peak_flops)
+        t_mem = hbm_bytes / (self.n_chips * self.hbm_bw)
+        t_coll = collective_bytes / (self.n_chips * self.ici_bw)
+        terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+        terms["dominant"] = max(terms, key=lambda k: terms[k])
+        # optimistic overlapped execution: bound by the slowest resource
+        terms["step_time_s"] = max(t_comp, t_mem, t_coll)
+        return terms
+
+    # -- power ---------------------------------------------------------------
+    def power_w(self, flops: float, hbm_bytes: float, step_time_s: float) -> float:
+        """Average per-chip power over one step."""
+        if step_time_s <= 0:
+            return IDLE_W
+        util_c = flops / (self.n_chips * self.peak_flops) / step_time_s
+        util_m = hbm_bytes / (self.n_chips * self.hbm_bw) / step_time_s
+        util_c, util_m = min(util_c, 1.0), min(util_m, 1.0)
+        return (IDLE_W
+                + COMPUTE_W * (self.clock_scale ** 2.5) * util_c
+                + HBM_W * self.hbm_scale * util_m)

@@ -1,0 +1,2 @@
+from repro.serve.engine import Engine, GenerationResult
+from repro.serve.kv_cache import Request, SlotServer

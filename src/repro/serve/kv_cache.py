@@ -1,0 +1,123 @@
+"""Slot-based continuous batching over a shared fixed-capacity KV cache.
+
+``Engine.generate`` serves one whole batch to completion; a production server
+instead keeps B slots busy: when a request finishes (EOS or length budget) its
+slot is freed and the next queued request is prefilled into it while the other
+slots keep decoding.  ``SlotServer`` implements that loop on top of the same
+Model prefill/decode functions, using the per-slot position support in
+``decode_attention`` (a (B,) position vector: every row writes/attends at its
+own causal frontier, so slots at different depths decode in one batch).
+
+Slot hygiene: a freed slot's cache rows are overwritten by the next prefill
+on [0, prompt_len) and every later position is re-written by decode before it
+enters the attention frontier, so stale rows are never attended.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # prompt token ids (1-D)
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class SlotServer:
+    """Continuous-batching server with n_slots concurrent sequences."""
+
+    def __init__(self, model, params, n_slots: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = model.empty_caches(n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)        # next write position
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.finished: List[Request] = []
+        self._queue: List[Request] = []
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(self.model.decode_step)
+
+    # -- prefill one request into one slot of the shared caches ---------------
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        toks = jnp.asarray(req.tokens[None, :])
+        logits, fresh = self.model.prefill(self.params, {"tokens": toks})
+        plen = len(req.tokens)
+
+        def put(shared, new):
+            """Merge a batch=1 fresh cache leaf into the shared leaf's slot.
+
+            Leaf kinds are identified structurally: attn KV differs from the
+            shared leaf in (batch, seq); mamba state/conv differ in batch
+            only."""
+            diffs = [i for i in range(new.ndim)
+                     if shared.shape[i] != new.shape[i]]
+            if len(diffs) == 2:                       # attn kv: pad seq, place
+                b_ax, s_ax = diffs
+                pad = [(0, 0)] * new.ndim
+                pad[s_ax] = (0, shared.shape[s_ax] - new.shape[s_ax])
+                return jax.lax.dynamic_update_slice_in_dim(
+                    shared, jnp.pad(new, pad).astype(shared.dtype), slot,
+                    axis=b_ax)
+            if len(diffs) == 1:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    shared, new.astype(shared.dtype), slot, axis=diffs[0])
+            return new.astype(shared.dtype)           # n_slots == 1
+
+        self.caches = jax.tree.map(put, self.caches, fresh)
+        first = int(jnp.argmax(logits[0]))
+        req.out.append(first)
+        self.active[slot] = req
+        self.pos[slot] = plen
+        self._next_tok[slot, 0] = first
+        self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.active[slot]
+        tok = req.out[-1]
+        if (len(req.out) >= req.max_new
+                or (self.eos_id is not None and tok == self.eos_id)
+                or self.pos[slot] >= self.max_len - 1):
+            req.done = True
+            self.finished.append(req)
+            self.active[slot] = None
+
+    # -- public API -------------------------------------------------------------
+    def submit(self, rid: int, tokens, max_new: int) -> None:
+        self._queue.append(Request(rid, np.asarray(tokens, np.int32), max_new))
+
+    def step(self) -> int:
+        """Fill free slots, then one decode step for all busy slots."""
+        for s in range(self.n_slots):
+            if self.active[s] is None and self._queue:
+                self._prefill_into_slot(self._queue.pop(0), s)
+        busy = [s for s in range(self.n_slots) if self.active[s] is not None]
+        if not busy:
+            return 0
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self._next_tok), self.caches,
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for s in busy:
+            self.active[s].out.append(int(nxt[s]))
+            self.pos[s] += 1
+            self._next_tok[s, 0] = int(nxt[s])
+            self._maybe_finish(s)
+        return len(busy)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self._queue:
+                break
+        return self.finished

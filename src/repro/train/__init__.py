@@ -1,0 +1,3 @@
+from repro.train.optimizer import adamw, adafactor, cosine_schedule, OPTIMIZERS
+from repro.train.train_step import TrainStepConfig, make_train_step, init_train_state, train_state_shapes
+from repro.train.checkpoint import CheckpointManager

@@ -1,0 +1,143 @@
+"""Optimizers (pure pytree, no optax): AdamW, Adafactor, schedules, clipping.
+
+Adafactor matters at scale: AdamW state is 8 B/param fp32, which cannot fit
+llama4-maverick-400b training on a single 256-chip v5e pod (4 TB pod HBM);
+Adafactor's factored second moment is O(rows+cols) and makes that cell fit —
+the roofline table reports both (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizer interface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr(step)
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([x[0] for x in new])
+        new_m = treedef.unflatten([x[1] for x in new])
+        new_v = treedef.unflatten([x[2] for x in new])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable, eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, min_dim_factored: int = 128) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), no momentum."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(one, params,
+                                      is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        decay = 1.0 - stepf ** -0.8
+        lr_t = lr(step)
+
+        def upd(g, slot, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = decay * slot["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * slot["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(vr[..., None] / denom[..., None])
+                u = u * jax.lax.rsqrt(vc[..., None, :])
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = decay * slot["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_slot = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr_t * u
+            if weight_decay and p.ndim >= 2:
+                newp = newp - lr_t * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_slot
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["slots"])
+        flat_p = treedef.flatten_up_to(params)
+        new = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (treedef.unflatten([x[0] for x in new]),
+                {"slots": treedef.unflatten([x[1] for x in new])})
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; multi-device tests run in subprocesses with their own env.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with N forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,226 @@
+"""JHost/JClient/JConfig/JMeasure integration: Algorithm 1 end-to-end over
+loopback and ZMQ transports, compile-cache behaviour, straggler handling."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (JClient, JConfig, JHost, JMemory, JPower, JTime,
+                        RandomSearch, ResultStore, TestConfig, transport,
+                        tpu_pod_space)
+from repro.core.space import KIND_SW
+from repro.roofline.analysis import Artifact
+
+
+def toy_artifact(n_dev=256):
+    return Artifact(flops_per_device=5e12, bytes_per_device=2e10,
+                    wire_bytes_per_device=1e8, collectives={},
+                    arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                    output_bytes=10 ** 6, n_devices=n_dev)
+
+
+def toy_build(tc):
+    return toy_artifact(), {}
+
+
+@pytest.fixture
+def jc():
+    return JConfig(tpu_pod_space(n_chips=256), n_chips=256)
+
+
+# ---------------------------------------------------------------------------
+# JConfig
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_ignores_hw_knobs(jc):
+    space = jc.space
+    base = space.default()
+    tc1 = TestConfig(0, "a", "train_4k", dict(base))
+    hw_changed = dict(base, clock_scale=0.5, hbm_scale=1 / 16)
+    tc2 = TestConfig(1, "a", "train_4k", hw_changed)
+    assert jc.cache_key(tc1) == jc.cache_key(tc2)
+    sw_changed = dict(base, remat="none")
+    tc3 = TestConfig(2, "a", "train_4k", sw_changed)
+    assert jc.cache_key(tc1) != jc.cache_key(tc3)
+
+
+def test_hw_model_ladders(jc):
+    hw = jc.hw_model({"clock_scale": 0.5, "hbm_scale": 0.25, "ici_scale": 0.5})
+    full = jc.hw_model({})
+    assert hw.peak_flops == pytest.approx(0.5 * full.peak_flops)
+    assert hw.hbm_bw == pytest.approx(0.25 * full.hbm_bw)
+    assert hw.ici_bw == pytest.approx(0.5 * full.ici_bw)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_space_encode_decode_roundtrip(seed):
+    space = tpu_pod_space(n_chips=256)
+    cfg = space.sample(np.random.default_rng(seed))
+    assert space.decode(space.encode(cfg)) == cfg
+    assert space.index_decode(space.index_encode(cfg)) == cfg
+    mutated = space.mutate(cfg, np.random.default_rng(seed))
+    for k in space:
+        assert mutated[k.name] in k.values
+
+
+# ---------------------------------------------------------------------------
+# JMeasure: knob physics
+# ---------------------------------------------------------------------------
+
+
+def test_jtime_monotone_in_ladders(jc):
+    art = toy_artifact()
+    t_fast = JTime().measure(art, jc.hw_model({}), {})["time_s"]
+    t_slow = JTime().measure(art, jc.hw_model({"clock_scale": 0.5,
+                                               "hbm_scale": 1 / 16}), {})["time_s"]
+    assert t_slow > t_fast
+
+
+def test_jpower_tradeoff(jc):
+    """Higher clock: faster but more power — the paper's inverse correlation."""
+    art = toy_artifact()
+    hw_hi, hw_lo = jc.hw_model({}), jc.hw_model({"clock_scale": 0.5})
+    t_hi = JTime().measure(art, hw_hi, {})["time_s"]
+    t_lo = JTime().measure(art, hw_lo, {})["time_s"]
+    p_hi = JPower().measure(art, hw_hi, {})["power_w"]
+    p_lo = JPower().measure(art, hw_lo, {})["power_w"]
+    assert t_hi < t_lo and p_hi > p_lo
+
+
+def test_jmemory_reports_fit(jc):
+    art = toy_artifact()
+    m = JMemory().measure(art, jc.hw_model({}), {})
+    assert m["fits_hbm"] == 1.0 and m["mem_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# JClient: caching + failure capture
+# ---------------------------------------------------------------------------
+
+
+def test_jclient_cache(jc):
+    calls = []
+
+    def build(tc):
+        calls.append(tc.config_id)
+        return toy_artifact(), {}
+
+    client = JClient(jc, build)
+    base = jc.space.default()
+    r1 = client.evaluate(TestConfig(0, "a", "s", dict(base)))
+    r2 = client.evaluate(TestConfig(1, "a", "s", dict(base, clock_scale=0.5)))
+    r3 = client.evaluate(TestConfig(2, "a", "s", dict(base, remat="none")))
+    assert len(calls) == 2            # hw knob change did not recompile
+    assert not r1["cached"] and r2["cached"] and not r3["cached"]
+    assert r1["metrics"]["time_s"] > 0
+
+
+def test_jclient_failure_reported(jc):
+    def build(tc):
+        raise RuntimeError("boom")
+
+    client = JClient(jc, build)
+    r = client.evaluate(TestConfig(0, "a", "s", jc.space.default()))
+    assert r["status"] == "failed" and "boom" in r["metrics"]["error"]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end over both transports
+# ---------------------------------------------------------------------------
+
+
+def _explore(host_transport, client_transports, jc, n=20, build=toy_build,
+             timeout_s=20.0):
+    clients = [JClient(jc, build, transport=t, client_id=i)
+               for i, t in enumerate(client_transports)]
+    threads = [threading.Thread(target=c.serve,
+                                kwargs=dict(poll_s=0.01, idle_limit_s=None),
+                                daemon=True) for c in clients]
+    for t in threads:
+        t.start()
+    host = JHost(host_transport, ResultStore(), timeout_s=timeout_s, poll_s=0.01)
+    algo = RandomSearch(jc.space, seed=0)
+    host.explore(algo, "toy", "train_4k", n)
+    host.stop_clients()
+    return host.store
+
+
+def test_loopback_end_to_end(jc):
+    pair = transport.LoopbackPair(3)
+    store = _explore(pair.host(), [pair.client(i) for i in range(3)], jc, 25)
+    assert len(store.ok_records()) == 25
+    front = store.pareto_front(["time_s", "power_w"])
+    assert 1 <= len(front) <= 25
+
+
+def test_zmq_end_to_end(jc):
+    """The paper's actual transport: ZMQ PUSH/PULL over TCP."""
+    ports = [np.random.randint(20000, 40000) for _ in range(3)]
+    host_t = None
+    try:
+        client_ts = [transport.ZmqClientTransport(
+            f"tcp://127.0.0.1:{ports[i]}", f"tcp://127.0.0.1:{ports[2]}")
+            for i in range(2)]
+        host_t = transport.ZmqHostTransport(
+            f"tcp://*:{ports[2]}",
+            {i: f"tcp://127.0.0.1:{ports[i]}" for i in range(2)})
+        store = _explore(host_t, client_ts, jc, 12)
+        assert len(store.ok_records()) == 12
+    finally:
+        pass  # sockets closed by GC; LINGER=0
+
+
+def test_straggler_requeued(jc):
+    """A dead client's config is re-dispatched to a healthy one."""
+    pair = transport.LoopbackPair(2)
+
+    # client 1 never serves (simulated node failure) — no thread started
+    good = JClient(jc, toy_build, transport=pair.client(0), client_id=0)
+    threading.Thread(target=good.serve,
+                     kwargs=dict(poll_s=0.01, idle_limit_s=None),
+                     daemon=True).start()
+
+    host = JHost(pair.host(), ResultStore(), timeout_s=0.5, poll_s=0.01)
+    algo = RandomSearch(jc.space, seed=0)
+    host.explore(algo, "toy", "s", 8)
+    oks = host.store.ok_records()
+    assert len(oks) == 8                      # everything completed
+    assert all(r.client_id == 0 for r in oks)  # ...on the healthy client
+    assert 1 in host.quarantined
+
+
+def test_results_csv_roundtrip(tmp_path, jc):
+    pair = transport.LoopbackPair(1)
+    store = _explore(pair.host(), [pair.client(0)], jc, 5)
+    path = str(tmp_path / "r.csv")
+    store.to_csv(path)
+    import csv
+
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 5
+    assert any(k.startswith("metric.time_s") for k in rows[0])
+    assert any(k.startswith("knob.") for k in rows[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.1, 10)),
+                min_size=1, max_size=30))
+def test_pareto_front_is_nondominated(pts):
+    """Property: no returned front point is dominated by any record."""
+    from repro.core.results import ResultRecord
+
+    store = ResultStore()
+    for i, (a, b) in enumerate(pts):
+        store.add(ResultRecord(i, "a", "s", {}, {"t": a, "p": b}))
+    front = store.pareto_front(["t", "p"])
+    assert front
+    arr = np.asarray(pts)
+    for r in front:
+        y = np.array([r.metrics["t"], r.metrics["p"]])
+        dominated = np.any(np.all(arr <= y, 1) & np.any(arr < y, 1))
+        assert not dominated

@@ -1,0 +1,74 @@
+"""Prefill↔decode equivalence: running prefill over S tokens gives the same
+last-token logits as prefill over S-1 + one decode step — for every mixer
+family (attention, sliding-window, SSD, MoE, hybrid, VLM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import BuildFlags, Model
+
+FAMS = ["tinyllama-1.1b", "gemma3-27b", "jamba-v0.1-52b", "mamba2-780m",
+        "deepseek-moe-16b", "internvl2-2b", "musicgen-medium"]
+
+
+def _pad_caches(caches, old_s):
+    def pad(c):
+        if c.ndim >= 3 and c.shape[-3] == old_s:
+            w = [(0, 0)] * c.ndim
+            w[-3] = (0, 1)
+            return jnp.pad(c, w)
+        return c
+    return jax.tree.map(pad, caches)
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_prefill_vs_decode(name):
+    arch = reduced(get_arch(name))
+    model = Model(arch, BuildFlags(dtype="float32", remat="none", sp=False))
+    params = model.init(jax.random.key(1))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.key(2), (b, s), 0, arch.vocab_size)
+    extra = {}
+    n_text = s
+    if arch.frontend == "vision":
+        f = arch.n_frontend_tokens
+        extra["image_embeds"] = jax.random.normal(
+            jax.random.key(3), (b, f, arch.d_model))
+        n_text = s - f
+    if arch.frontend == "audio":
+        pytest.skip("audio frontend has no token-decode prefix semantics")
+
+    full, _ = model.prefill(params, {**extra, "tokens": toks[:, :n_text]})
+    pre, caches = model.prefill(params, {**extra, "tokens": toks[:, :n_text - 1]})
+    caches = _pad_caches(caches, s - 1)
+    dec, _ = model.decode_step(params, toks[:, n_text - 1:n_text], caches, s - 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_multi_step_decode_matches_prefill():
+    """Four consecutive decode steps equal one long prefill (tinyllama)."""
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    model = Model(arch, BuildFlags(dtype="float32", remat="none", sp=False))
+    params = model.init(jax.random.key(5))
+    b, s0, extra_steps = 1, 8, 4
+    s = s0 + extra_steps
+    toks = jax.random.randint(jax.random.key(6), (b, s), 0, arch.vocab_size)
+
+    _, caches = model.prefill(params, {"tokens": toks[:, :s0]})
+    # grow caches to full length
+    def grow(c):
+        if c.ndim >= 3 and c.shape[-3] == s0:
+            w = [(0, 0)] * c.ndim
+            w[-3] = (0, extra_steps)
+            return jnp.pad(c, w)
+        return c
+    caches = jax.tree.map(grow, caches)
+    for i in range(extra_steps):
+        logits, caches = model.decode_step(params, toks[:, s0 + i:s0 + i + 1],
+                                           caches, s0 + i)
+    full, _ = model.prefill(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(full), np.asarray(logits),
+                               atol=5e-5, rtol=5e-5)

@@ -1,0 +1,201 @@
+"""Distribution: sharding rules, multi-device train/decode lowering, pipeline
+parallelism, int8 collective compression.  Multi-device cases run in
+subprocesses with forced host device counts (the main process must keep 1
+device for the smoke tests)."""
+import numpy as np
+import pytest
+
+from tests.conftest import run_with_devices
+
+
+def test_param_spec_rules_single_device():
+    """Spec shapes are rank-correct and divisibility-safe (pure logic)."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import BuildFlags, Model
+
+    code_mesh = None  # single-device policy still yields valid specs
+    from repro.parallel.sharding import ShardingPolicy
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    policy = ShardingPolicy(mesh)
+    model = Model(get_arch("deepseek-moe-16b"), BuildFlags())
+    shapes = model.init_shapes()
+    specs = policy.param_specs_tree(shapes)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or type(x).__name__ == "PartitionSpec")
+    assert len(flat_shapes) == len(flat_specs)
+    for shp, spec in zip(flat_shapes, flat_specs):
+        assert len(spec) <= len(shp.shape)
+        for dim, axes in zip(shp.shape, tuple(spec) + (None,) * 8):
+            if axes is None:
+                continue
+            size = np.prod([mesh.shape[a] for a in
+                            ((axes,) if isinstance(axes, str) else axes)])
+            assert dim % size == 0, (shp.shape, tuple(spec))
+
+
+def test_train_step_lowers_on_2x4_mesh():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, reduced, ShapeConfig
+from repro.launch.build import build_cell
+from repro.launch.mesh import make_mesh_dp_tp
+from repro.models import BuildFlags
+
+mesh = make_mesh_dp_tp(2, 4)
+for name in ["tinyllama-1.1b", "deepseek-moe-16b", "jamba-v0.1-52b", "mamba2-780m"]:
+    arch = reduced(get_arch(name), d_model=64, head_dim=16)
+    shape = ShapeConfig("t", "train", 32, 4)
+    cell = build_cell(arch, shape, mesh, BuildFlags(dtype="float32", sp=True))
+    assert cell.compiled is not None
+    print("LOWER_OK", name)
+""", n_devices=8)
+    assert out.count("LOWER_OK") == 4
+
+
+def test_sharded_train_matches_single_device():
+    """The same train step on a (2,4) mesh and on 1 device gives the same
+    loss trajectory — SPMD correctness end-to-end."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch, reduced
+from repro.data import DataConfig, SyntheticLM, device_put_batch
+from repro.models import BuildFlags, Model
+from repro.parallel.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh_dp_tp
+from repro.train import TrainStepConfig, adamw, cosine_schedule, init_train_state, make_train_step
+
+arch = reduced(get_arch("tinyllama-1.1b"))
+def run(policy):
+    model = Model(arch, BuildFlags(dtype="float32", remat="none", sp=policy is not None), policy)
+    opt = adamw(cosine_schedule(1e-3, 2, 20))
+    state = init_train_state(model, opt, jax.random.key(0))
+    step = jax.jit(make_train_step(model, opt))
+    data = SyntheticLM(arch, DataConfig(batch=4, seq_len=32, seed=1))
+    losses = []
+    for i in range(4):
+        state, m = step(state, device_put_batch(data.batch(i), policy))
+        losses.append(float(m["loss"]))
+    return losses
+
+mesh = make_mesh_dp_tp(2, 4)
+l_sharded = run(ShardingPolicy(mesh))
+l_single = run(None)
+np.testing.assert_allclose(l_sharded, l_single, rtol=2e-4)
+print("SPMD_MATCH", l_sharded)
+"""
+    out = run_with_devices(code, n_devices=8)
+    assert "SPMD_MATCH" in out
+
+
+def test_decode_cache_seq_sharding():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, reduced, ShapeConfig
+from repro.launch.build import build_cell
+from repro.launch.mesh import make_mesh_dp_tp
+from repro.models import BuildFlags
+
+mesh = make_mesh_dp_tp(2, 4)
+arch = reduced(get_arch("glm4-9b"), d_model=64, head_dim=16)
+shape = ShapeConfig("d", "decode", 64, 4)   # 64-token cache, batch 4
+cell = build_cell(arch, shape, mesh, BuildFlags(dtype="float32"))
+assert cell.compiled is not None
+# batch=1 long-context path: cache seq must shard over data+model
+shape1 = ShapeConfig("d1", "decode", 64, 1)
+cell1 = build_cell(arch, shape1, mesh, BuildFlags(dtype="float32"))
+assert cell1.compiled is not None
+print("DECODE_OK")
+""", n_devices=8)
+    assert "DECODE_OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_dp_tp
+from repro.parallel.pipeline import pipeline_apply, bubble_fraction
+
+mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+n_stages, n_micro, mb, d = 4, 8, 2, 16
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+key = jax.random.key(0)
+ws = jax.random.normal(key, (n_stages, d, d)) * 0.5
+xs = jax.random.normal(jax.random.key(1), (n_micro, mb, d))
+
+out = pipeline_apply(mesh, "pipe", stage_fn, ws, xs)
+
+# sequential reference: each microbatch through all stages
+ref = xs
+for s in range(n_stages):
+    ref = jnp.tanh(ref @ ws[s])
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+print("PIPELINE_OK")
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "PIPELINE_OK" in out
+
+
+def test_psum_int8_close_to_exact():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compress import psum_int8
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jax.random.normal(jax.random.key(0), (8, 128))
+
+def f(x):
+    return psum_int8(x[0], "data")
+
+def g(x):
+    return jax.lax.psum(x[0], "data")
+
+fa = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+ga = shard_map(g, mesh=mesh, in_specs=P("data"), out_specs=P())
+approx, exact = fa(x), ga(x)
+err = np.abs(np.asarray(approx) - np.asarray(exact)).max()
+scale = np.abs(np.asarray(exact)).max()
+assert err < 0.1 * scale, (err, scale)
+print("PSUM_INT8_OK", err / scale)
+"""
+    out = run_with_devices(code, n_devices=8)
+    assert "PSUM_INT8_OK" in out
+
+
+def test_grouped_moe_matches_ungrouped():
+    """Group-local MoE dispatch (g=dp) equals the g=1 reference when capacity
+    is ample (no drops) — the §Perf A optimization must not change the math."""
+    code = """
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch, reduced
+from repro.models import BuildFlags, Model
+from repro.parallel.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh_dp_tp
+from repro.data import DataConfig, SyntheticLM, device_put_batch
+
+arch = dataclasses.replace(reduced(get_arch("deepseek-moe-16b")),
+                           capacity_factor=4.0)   # no drops
+batch = SyntheticLM(arch, DataConfig(batch=4, seq_len=16, seed=2)).batch(0)
+
+mesh = make_mesh_dp_tp(2, 4)
+policy = ShardingPolicy(mesh, sp=False, fsdp=False)
+m_sharded = Model(arch, BuildFlags(dtype="float32", remat="none", sp=False,
+                                   fsdp=False), policy)
+m_single = Model(arch, BuildFlags(dtype="float32", remat="none", sp=False))
+params = m_single.init(jax.random.key(0))
+l1, _ = m_single.loss_fn(params, device_put_batch(batch))
+l2, _ = m_sharded.loss_fn(params, device_put_batch(batch, policy))
+np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+print("GROUPED_MOE_OK", float(l1), float(l2))
+"""
+    out = run_with_devices(code, n_devices=8)
+    assert "GROUPED_MOE_OK" in out
