@@ -5,6 +5,7 @@ import os
 import sys
 import threading
 import time
+import zlib
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
@@ -88,6 +89,96 @@ def explore_generation(arch_name: str, n_samples: int, algo_name: str = "random"
     host.stop_clients()
     wall = time.time() - t0
     return store, wall, sum(c.n_compiled for c in cls), n_samples
+
+
+class _GenArch:
+    """Stand-in arch for an hw-ladder-heavy masked space (no attn/ssm knobs)."""
+    n_heads = 0
+    ssm_state = 0
+
+
+class _GenShape:
+    kind = "generate"
+    global_batch = 8
+
+
+def evalpath_workload(chips: int = 256):
+    """Analytic toy workload over the hw-ladder-heavy ``tpu_pod_space``.
+
+    The build is cheap and jax-free on purpose: bench_evalpath measures the
+    *evaluation path* (transport framing, artifact cache, measurement sweep),
+    not XLA compile time.  Artifacts vary by sw fingerprint so group-by-
+    compile is exercised for real.
+
+    Returns (space, jconfig, build_fn).
+    """
+    from repro.core import JConfig, tpu_pod_space
+    from repro.roofline.analysis import Artifact
+
+    def art(f):
+        return Artifact(flops_per_device=f, bytes_per_device=2e10,
+                        wire_bytes_per_device=1e8, collectives={},
+                        arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                        output_bytes=10 ** 6, n_devices=chips)
+
+    space = tpu_pod_space(_GenArch(), _GenShape(), n_chips=chips)
+    jc = JConfig(space, n_chips=chips)
+
+    def build(tc):
+        # stable digest, not hash(): the workload mix must be identical
+        # across runs so bench.json numbers track real throughput changes
+        h = zlib.crc32(repr(jc.cache_key(tc)).encode()) % 7 + 1
+        return art(5e12 * h), {"decode_artifact": art(1e11 * h),
+                               "n_decode_tokens": 100}
+
+    return space, jc, build
+
+
+def run_evalpath(tcs, jc, build, batched: bool, reps: int = 3):
+    """Push N testConfigs through a serving JClient over loopback.
+
+    Scalar mode ping-pongs one config per message (the seed protocol);
+    batched mode ships one columnar frame each way.  Returns
+    (best_wall_s, n_compiled, {config_id: result}).
+    """
+    import threading
+    import time as _time
+
+    from repro.core import JClient, transport
+
+    best = None
+    for _ in range(reps):
+        pair = transport.LoopbackPair(1)
+        client = JClient(jc, build, transport=pair.client(0), client_id=0)
+        threading.Thread(target=client.serve, kwargs=dict(poll_s=0.005),
+                         daemon=True).start()
+        host = pair.host()
+        deadline = _time.monotonic() + 120.0   # fail fast if the client dies
+        t0 = _time.perf_counter()
+        results = []
+        if batched:
+            host.push_many(0, [t.to_wire() for t in tcs])
+            while len(results) < len(tcs):
+                got = host.pull_many(1.0)
+                results += got
+                if not got and _time.monotonic() > deadline:
+                    raise RuntimeError("evalpath client stalled (batched)")
+        else:
+            for t in tcs:
+                host.push(0, t.to_wire())
+                while True:
+                    m = host.pull(1.0)
+                    if m is not None:
+                        results.append(m)
+                        break
+                    if _time.monotonic() > deadline:
+                        raise RuntimeError("evalpath client stalled (scalar)")
+        wall = _time.perf_counter() - t0
+        host.push(0, {"cmd": "stop"})
+        if best is None or wall < best[0]:
+            best = (wall, client.n_compiled,
+                    {r["config_id"]: r for r in results})
+    return best
 
 
 def scatter_png(store, path: str, title: str):

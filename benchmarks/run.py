@@ -10,13 +10,57 @@ JClient evaluation; derived = the artifact's headline number).
     PYTHONPATH=src python -m benchmarks.run fig2 table1  # subset
     BENCH_SAMPLES=50 ... to shrink the 200-config sweeps (CI use)
 """
+import json
 import os
 import sys
 import time
 
-from benchmarks.common import RESULTS, explore_generation, scatter_png
+from benchmarks.common import (RESULTS, evalpath_workload, explore_generation,
+                               run_evalpath, scatter_png)
 
 N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "200"))
+
+
+# ---------------------------------------------------------------------------
+# Evaluation-path throughput: scalar vs batched DSE loop (PR 1 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def bench_evalpath():
+    """Scalar vs batched evaluations/sec on an hw-ladder-heavy random sweep.
+
+    Same N configs both ways through a serving JClient over loopback:
+    scalar = one testConfig per message (the seed protocol), batched = one
+    columnar frame + group-by-compile + vectorized measurement.  Metrics must
+    be bit-identical per config; derived = speedup (×).
+    """
+    import numpy as np
+
+    from repro.core import TestConfig
+
+    space, jc, build = evalpath_workload()
+    rng = np.random.default_rng(0)
+    tcs = [TestConfig(i, "toy", "generate", space.sample(rng))
+           for i in range(N_SAMPLES)]
+    unique_sw = len({jc.cache_key(t) for t in tcs})
+
+    wall_s, compiles_s, res_s = run_evalpath(tcs, jc, build, batched=False)
+    wall_b, compiles_b, res_b = run_evalpath(tcs, jc, build, batched=True)
+
+    for cid, r in res_s.items():
+        if r["metrics"] != res_b[cid]["metrics"]:
+            raise RuntimeError(f"scalar/batched metrics diverge for {cid}: "
+                               f"{r['metrics']} != {res_b[cid]['metrics']}")
+    eps_s, eps_b = N_SAMPLES / wall_s, N_SAMPLES / wall_b
+    speedup = wall_s / wall_b
+    print(f"# evalpath: {N_SAMPLES} configs, {unique_sw} unique sw points "
+          f"(hw-ladder-heavy), metrics bit-identical")
+    print(f"#   scalar : {eps_s:8.0f} evals/s  ({compiles_s} compiles, "
+          f"{wall_s * 1e3:.1f} ms)")
+    print(f"#   batched: {eps_b:8.0f} evals/s  ({compiles_b} compiles, "
+          f"{wall_b * 1e3:.1f} ms)")
+    print(f"#   speedup = {speedup:.2f}x")
+    return wall_b / N_SAMPLES * 1e6, speedup
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +205,7 @@ def bench_roofline():
 
 
 BENCHES = {
+    "evalpath": bench_evalpath,
     "table1": bench_table1,
     "fig2": bench_fig2_llama,
     "fig4": bench_fig4_llava,
@@ -172,10 +217,15 @@ BENCHES = {
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
     print("name,us_per_call,derived")
+    rows = {}
     for name in names:
         us, derived = BENCHES[name]()
+        rows[name] = {"us_per_call": round(us, 1), "derived": derived}
         print(f"{name},{us:.1f},{derived:.6g}")
         sys.stdout.flush()
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "bench.json"), "w") as f:
+        json.dump({"n_samples": N_SAMPLES, "benches": rows}, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -8,17 +8,36 @@ Capabilities, mirroring the paper:
 The workload is injected as ``build_fn(TestConfig) -> (Artifact, meta)`` —
 "the workloads can be anything as JExplore is agnostic to the workload".
 Compiled artifacts are cached by the sw-knob fingerprint, the analogue of the
-network staying resident on a Jetson while only clocks change.
+network staying resident on a Jetson while only clocks change.  The cache is
+a true LRU: a hit refreshes the key, so hot sw-points survive long sweeps
+that touch more unique fingerprints than ``cache_size``.
+
+Batched fast path (group-by-compile)
+------------------------------------
+``evaluate_batch`` is the throughput-oriented entry point.  It groups the
+incoming configs by their sw-knob fingerprint (``JConfig.cache_key``),
+compiles each unique sw-group **once**, then sweeps every hw-knob variant of
+the group through the vectorized measurement path
+(``JMeasure.measure_batch`` over an ``HwModelBatch`` of ``(N,)`` ladder
+arrays).  Compile work is therefore O(unique sw-points) instead of
+O(configs), and per-config Python/dict overhead collapses into a handful of
+numpy sweeps — metrics stay bit-identical to the scalar ``evaluate`` path.
+``serve`` speaks both wire formats: a plain testConfig message is evaluated
+scalar; a ``{"cmd": "batch", "items": [...]}`` frame (see transport.py) runs
+``evaluate_batch`` and pushes one batched result frame back.
 """
 from __future__ import annotations
 
 import time
 import traceback
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.jconfig import JConfig, TestConfig
 from repro.core.jmeasure import DEFAULT_MEASURES, JMeasure
-from repro.core.transport import ClientTransport
+from repro.core.transport import (BATCH_CMD, BATCH_COLS_CMD, ClientTransport,
+                                  unframe_batch)
 from repro.roofline.analysis import Artifact
 
 BuildResult = Tuple[Artifact, Dict]
@@ -38,8 +57,32 @@ class JClient:
         self.client_id = client_id
         self._cache: Dict[tuple, BuildResult] = {}
         self._cache_size = cache_size
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_evictions = 0
         self.n_evaluated = 0
         self.n_compiled = 0
+
+    # -- artifact cache (LRU keyed by sw fingerprint) -------------------------
+    def _artifact(self, key: tuple, tc: TestConfig) -> BuildResult:
+        if key in self._cache:
+            self._cache[key] = self._cache.pop(key)  # refresh: true LRU
+            self._cache_hits += 1
+            return self._cache[key]
+        self._cache_misses += 1
+        built = self.build_fn(tc)
+        self.n_compiled += 1
+        if len(self._cache) >= self._cache_size:
+            self._cache.pop(next(iter(self._cache)))  # least-recently used
+            self._cache_evictions += 1
+        self._cache[key] = built
+        return built
+
+    def cache_info(self) -> Dict[str, int]:
+        """functools-style counters for the artifact LRU."""
+        return {"hits": self._cache_hits, "misses": self._cache_misses,
+                "evictions": self._cache_evictions,
+                "currsize": len(self._cache), "maxsize": self._cache_size}
 
     # -- single evaluation -------------------------------------------------
     def evaluate(self, tc: TestConfig) -> dict:
@@ -47,12 +90,7 @@ class JClient:
         key = self.jconfig.cache_key(tc)
         cached = key in self._cache
         try:
-            if not cached:
-                if len(self._cache) >= self._cache_size:
-                    self._cache.pop(next(iter(self._cache)))
-                self._cache[key] = self.build_fn(tc)
-                self.n_compiled += 1
-            art, meta = self._cache[key]
+            art, meta = self._artifact(key, tc)
             hw = self.jconfig.hw_model(tc.knobs)
             metrics: Dict[str, float] = {}
             for m in self.measures:
@@ -75,6 +113,60 @@ class JClient:
             "wall_s": time.monotonic() - t0,
         }
 
+    # -- batched evaluation (group-by-compile) --------------------------------
+    def evaluate_batch(self, tcs: Sequence[TestConfig]) -> List[dict]:
+        """Evaluate a batch with one compile per unique sw fingerprint.
+
+        Result dicts are ordered like ``tcs`` and carry exactly the scalar
+        ``evaluate`` schema; metric values are bit-identical to N scalar
+        calls (the vectorized sweep mirrors the scalar arithmetic op-for-op).
+        """
+        results: List[Optional[dict]] = [None] * len(tcs)
+        groups: Dict[tuple, List[int]] = {}
+        for i, tc in enumerate(tcs):
+            groups.setdefault(self.jconfig.cache_key(tc), []).append(i)
+
+        for key, idxs in groups.items():
+            g0 = time.monotonic()
+            was_cached = key in self._cache
+            cols: Dict[str, np.ndarray] = {}
+            try:
+                art, meta = self._artifact(key, tcs[idxs[0]])
+                hwb = self.jconfig.hw_model_batch([tcs[i].knobs for i in idxs])
+                for m in self.measures:
+                    cols.update(m.measure_batch(art, hwb, meta))
+            except Exception:
+                # scalar-parity fallback: a group-level failure (bad build, or
+                # one hw variant tripping a measure) must not fail sibling
+                # configs that would survive the scalar path — re-evaluate the
+                # group one config at a time
+                for i in idxs:
+                    results[i] = self.evaluate(tcs[i])
+                    self.n_evaluated -= 1   # evaluate() counted it; the batch
+                    # total is added once at the end for all of tcs
+                continue
+            # one C-level tolist per metric column beats N×K .item() calls
+            names = list(cols)
+            rows = [np.asarray(cols[k]).tolist() for k in names]
+            wall = (time.monotonic() - g0) / len(idxs)  # amortized per config
+            for j, i in enumerate(idxs):
+                tc = tcs[i]
+                results[i] = {
+                    "config_id": tc.config_id,
+                    "arch": tc.arch,
+                    "shape": tc.shape,
+                    "knobs": tc.knobs,
+                    "metrics": {k: col[j] for k, col in zip(names, rows)},
+                    "status": "ok",
+                    "client_id": self.client_id,
+                    # sequential-scalar parity: the group's first config pays
+                    # the compile, the rest ride the cache
+                    "cached": was_cached or j > 0,
+                    "wall_s": wall,
+                }
+        self.n_evaluated += len(tcs)
+        return results  # type: ignore[return-value]
+
     # -- Algorithm 1, JCLIENT procedure ---------------------------------------
     def serve(self, poll_s: float = 1.0, idle_limit_s: Optional[float] = None) -> int:
         assert self.transport is not None, "serve() needs a transport"
@@ -90,6 +182,16 @@ class JClient:
             idle = 0.0
             if msg.get("cmd") == "stop":
                 return served
+            if msg.get("cmd") in (BATCH_CMD, BATCH_COLS_CMD):
+                tcs = [TestConfig.from_wire(d) for d in unframe_batch(msg)]
+                # slim wire results: the host rehydrates knobs/arch/shape
+                # from its in-flight table, so don't echo them back
+                self.transport.push_many([
+                    {k: v for k, v in r.items()
+                     if k not in ("knobs", "arch", "shape")}
+                    for r in self.evaluate_batch(tcs)])
+                served += len(tcs)
+                continue
             result = self.evaluate(TestConfig.from_wire(msg))
             self.transport.push(result)
             served += 1

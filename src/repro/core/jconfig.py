@@ -11,11 +11,13 @@ Turns a design-point dict into everything the client needs to apply it:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.space import DesignSpace, KIND_SW
 from repro.models.model import BuildFlags
-from repro.roofline.hw import HwModel
+from repro.roofline.hw import HwModel, HwModelBatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +44,9 @@ class JConfig:
     def __init__(self, space: DesignSpace, n_chips: int = 256):
         self.space = space
         self.n_chips = n_chips
+        # sorted once: cache_key is on the batched hot path (once per config)
+        self._sw_names = tuple(sorted(
+            k.name for k in space if k.kind == KIND_SW))
 
     def build_flags(self, knobs: Dict[str, Any]) -> BuildFlags:
         kw = {}
@@ -71,8 +76,22 @@ class JConfig:
             dtype=str(knobs.get("dtype", "bfloat16")),
         )
 
+    def hw_model_batch(self, knobs_seq: Sequence[Dict[str, Any]]) -> HwModelBatch:
+        """Vectorized ``hw_model`` over configs sharing a sw fingerprint.
+
+        ``dtype`` is a sw knob, so within one cache-key group it is uniform —
+        the batch takes it from the first member.
+        """
+        return HwModelBatch(
+            self.n_chips,
+            np.asarray([float(k.get("clock_scale", 1.0)) for k in knobs_seq]),
+            np.asarray([float(k.get("hbm_scale", 1.0)) for k in knobs_seq]),
+            np.asarray([float(k.get("ici_scale", 1.0)) for k in knobs_seq]),
+            dtype=str(knobs_seq[0].get("dtype", "bfloat16")))
+
     def cache_key(self, tc: TestConfig) -> Tuple:
         """Fingerprint of everything that changes the compiled artifact."""
-        sw = tuple(sorted((k.name, tc.knobs[k.name]) for k in self.space
-                          if k.kind == KIND_SW and k.name in tc.knobs))
+        knobs = tc.knobs
+        # knob names are unique, so name-sorted pairs == sorted pairs
+        sw = tuple((n, knobs[n]) for n in self._sw_names if n in knobs)
         return (tc.arch, tc.shape, sw)

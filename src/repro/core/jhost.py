@@ -3,16 +3,26 @@
 Interfaces a user-defined search algorithm with N clients:
   * batch dispatch — as many in-flight configs as there are free clients, so
     batch-sampling search algorithms "work faster" (paper contribution 2);
-  * straggler mitigation / fault tolerance — every dispatched config carries a
-    deadline; on timeout it is re-queued to a healthy client (up to
-    ``max_retries``), and the late client is quarantined;
+    with ``batch_size=B`` the host asks the search for client-count×B chunks
+    and ships each chunk as one framed transport message, and the client
+    answers with one batched result frame (the group-by-compile fast path);
+  * straggler mitigation / fault tolerance — every dispatched chunk carries a
+    deadline; on timeout the late client is quarantined and the chunk's
+    surviving configs are re-queued (split across whichever clients free up
+    next, up to ``max_retries`` per config).  Configs with retries remaining
+    are never dropped just because no client is free at sweep time — they
+    wait in a pending queue;
   * result saving — every result lands in a ResultStore (CSV streaming).
+
+Scalar mode (``batch_size=None``) is the degenerate chunk-of-1 case and keeps
+the original one-testConfig-per-message wire format.
 """
 from __future__ import annotations
 
 import itertools
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,67 +49,114 @@ class JHost:
     def explore(self, search: SearchAlgorithm, arch: str, shape: str,
                 n_samples: int,
                 objectives: Sequence[str] = ("time_s", "power_w"),
-                progress: bool = False) -> ResultStore:
+                progress: bool = False,
+                batch_size: Optional[int] = None) -> ResultStore:
+        chunk = max(int(batch_size or 1), 1)
         ids = itertools.count()
+        bids = itertools.count()
         free: List[int] = [c for c in self.transport.client_ids()]
-        inflight: Dict[int, dict] = {}   # config_id -> {tc, client, deadline, retries}
+        # configs awaiting (re)dispatch: fresh asks and timed-out survivors
+        pending: Deque[Tuple[TestConfig, int]] = deque()
+        inflight: Dict[int, dict] = {}      # config_id -> {tc, batch, retries}
+        batches: Dict[int, dict] = {}       # batch_id -> {client, deadline, awaiting}
+        client_batch: Dict[int, int] = {}   # client -> its current batch_id
         issued = completed = 0
 
-        def dispatch(tc: TestConfig, retries: int):
+        def dispatch(items: List[Tuple[TestConfig, int]]) -> None:
             client = free.pop(0)
-            self.transport.push(client, tc.to_wire())
-            inflight[tc.config_id] = {
-                "tc": tc, "client": client,
-                "deadline": time.monotonic() + self.timeout_s,
-                "retries": retries,
+            self.transport.push_many(client, [tc.to_wire() for tc, _ in items])
+            bid = next(bids)
+            batches[bid] = {
+                "client": client,
+                # the deadline covers the whole chunk: a B-config batch gets
+                # B× the single-config budget
+                "deadline": time.monotonic() + self.timeout_s * len(items),
+                # configs this client has not answered *itself* yet — the
+                # client is freed only once this empties, even when a late
+                # straggler answers some of its configs first
+                "awaiting": {tc.config_id for tc, _ in items},
             }
+            client_batch[client] = bid
+            for tc, retries in items:
+                inflight[tc.config_id] = {"tc": tc, "batch": bid,
+                                          "retries": retries}
 
         while completed < n_samples:
-            # fill free clients with fresh asks
-            n_new = min(len(free), n_samples - issued)
-            if n_new > 0:
-                for knobs in search.ask(n_new):
-                    tc = TestConfig(next(ids), arch, shape, knobs)
-                    dispatch(tc, self.max_retries)
+            # top up the pending queue with fresh asks, then fill free clients
+            want = min(n_samples - issued,
+                       max(len(free) * chunk - len(pending), 0))
+            if want > 0:
+                for knobs in search.ask(want):
+                    pending.append((TestConfig(next(ids), arch, shape, knobs),
+                                    self.max_retries))
                     issued += 1
+            while free and pending:
+                dispatch([pending.popleft()
+                          for _ in range(min(chunk, len(pending)))])
 
-            msg = self.transport.pull(self.poll_s)
+            msgs = self.transport.pull_many(self.poll_s)
             now = time.monotonic()
 
-            if msg is not None:
+            for msg in msgs:
                 cid = msg["config_id"]
                 info = inflight.pop(cid, None)
-                if info is None:
-                    continue  # late duplicate from a quarantined straggler
-                client = msg.get("client_id", info["client"])
-                if client not in self.quarantined:
-                    free.append(client)
-                rec = ResultRecord.from_wire(msg)
-                self.store.add(rec)
-                completed += 1
-                if rec.status == "ok":
-                    y = np.asarray([rec.metrics[k] for k in objectives], float)
-                    search.tell(rec.knobs, y)
-                if progress and completed % 10 == 0:
-                    print(f"[jhost] {completed}/{n_samples} "
-                          f"(inflight={len(inflight)}, free={len(free)})")
-
-            # straggler sweep
-            for cid, info in list(inflight.items()):
-                if now <= info["deadline"]:
-                    continue
-                del inflight[cid]
-                self.quarantined.add(info["client"])
-                if info["retries"] > 0 and free:
-                    dispatch(info["tc"], info["retries"] - 1)
-                else:
-                    self.store.add(ResultRecord(
-                        config_id=cid, arch=arch, shape=shape,
-                        knobs=info["tc"].knobs, metrics={}, status="timeout",
-                        client_id=info["client"]))
+                if info is not None:        # first answer for this config
+                    if "knobs" not in msg:  # slim batch result: rehydrate echo
+                        tc = info["tc"]
+                        msg["knobs"], msg["arch"], msg["shape"] = \
+                            tc.knobs, tc.arch, tc.shape
+                    rec = ResultRecord.from_wire(msg)
+                    self.store.add(rec)
                     completed += 1
+                    if rec.status == "ok":
+                        y = np.asarray([rec.metrics[k] for k in objectives],
+                                       float)
+                        search.tell(rec.knobs, y)
+                    if progress and completed % 10 == 0:
+                        print(f"[jhost] {completed}/{n_samples} "
+                              f"(inflight={len(inflight)}, free={len(free)}, "
+                              f"pending={len(pending)})")
+                # owner bookkeeping runs even for duplicate answers: the
+                # *reporting* client finished this config either way, and is
+                # freed exactly when it has answered its whole chunk itself
+                reporter = msg.get("client_id")
+                if reporter is None and info is not None:
+                    reporter = batches.get(info["batch"], {}).get("client")
+                bid = client_batch.get(reporter)
+                if bid is not None:
+                    batch = batches[bid]
+                    batch["awaiting"].discard(cid)
+                    if not batch["awaiting"]:
+                        del batches[bid]
+                        del client_batch[reporter]
+                        if reporter not in self.quarantined:
+                            free.append(reporter)
 
-            if not inflight and not free and completed < n_samples:
+            # straggler sweep: expire whole batches, requeue their survivors
+            for bid, batch in list(batches.items()):
+                if now <= batch["deadline"]:
+                    continue
+                del batches[bid]
+                client_batch.pop(batch["client"], None)
+                self.quarantined.add(batch["client"])
+                for cid in sorted(batch["awaiting"]):
+                    info = inflight.get(cid)
+                    if info is None or info["batch"] != bid:
+                        continue  # already answered (possibly by a late peer)
+                    del inflight[cid]
+                    if info["retries"] > 0:
+                        # survivors wait for the next free client instead of
+                        # being dropped as terminal timeouts
+                        pending.append((info["tc"], info["retries"] - 1))
+                    else:
+                        self.store.add(ResultRecord(
+                            config_id=cid, arch=arch, shape=shape,
+                            knobs=info["tc"].knobs, metrics={},
+                            status="timeout", client_id=batch["client"]))
+                        completed += 1
+
+            if (not inflight and not free and not client_batch
+                    and completed < n_samples):
                 raise RuntimeError("all clients quarantined; exploration stuck")
         return self.store
 

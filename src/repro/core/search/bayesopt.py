@@ -6,6 +6,13 @@ on the normalised ordinal encoding, and maximises Expected Improvement over a
 random candidate pool (discrete spaces make gradient ascent pointless).  An
 EHVI-greedy variant is also provided: candidates are scored by the exact 2-D
 hypervolume improvement of the GP posterior mean.
+
+Batch-aware internals: the GP kernel matrix depends only on the observed
+*inputs*, so one Cholesky factorisation (``GP.fit_x``) is shared by every
+objective / scalarisation / pick within an ask (``GP.fit_y`` re-solves for
+the new targets against the cached factor).  EHVI scoring is one vectorized
+incremental-hypervolume sweep over the sorted front for the whole candidate
+pool — no per-candidate ``hypervolume_2d`` calls.
 """
 from __future__ import annotations
 
@@ -19,7 +26,13 @@ from repro.core.results import nondominated_mask
 
 
 class GP:
-    """Tiny RBF-kernel GP with observation noise (pure numpy)."""
+    """Tiny RBF-kernel GP with observation noise (pure numpy).
+
+    ``fit_x`` factors the kernel matrix once; ``fit_y`` solves for new
+    targets against the cached Cholesky factor, so a batch ask that predicts
+    several target vectors on the same observations pays for one
+    factorisation total.
+    """
 
     def __init__(self, lengthscale: float = 0.3, noise: float = 1e-3,
                  signal: float = 1.0):
@@ -32,15 +45,24 @@ class GP:
         d2 = np.sum((a[:, None, :] - b[None, :, :]) ** 2, -1)
         return self.signal * np.exp(-0.5 * d2 / self.ls ** 2)
 
-    def fit(self, x: np.ndarray, y: np.ndarray) -> "GP":
+    def fit_x(self, x: np.ndarray) -> "GP":
+        """Factor K(x, x) + σ²I once; reusable across any number of targets."""
         self._x = x
+        k = self._k(x, x) + self.noise * np.eye(len(x))
+        self._l = np.linalg.cholesky(k)
+        return self
+
+    def fit_y(self, y: np.ndarray) -> "GP":
+        """Solve for a target vector against the cached Cholesky factor."""
+        assert self._x is not None, "fit_x first"
         self._ym = float(np.mean(y))
         self._ys = float(np.std(y)) or 1.0
         yn = (y - self._ym) / self._ys
-        k = self._k(x, x) + self.noise * np.eye(len(x))
-        self._l = np.linalg.cholesky(k)
         self._alpha = np.linalg.solve(self._l.T, np.linalg.solve(self._l, yn))
         return self
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "GP":
+        return self.fit_x(x).fit_y(y)
 
     def predict(self, xs: np.ndarray):
         ks = self._k(xs, self._x)
@@ -55,6 +77,46 @@ def expected_improvement(mu: np.ndarray, sigma: np.ndarray, best: float) -> np.n
 
     z = (best - mu) / sigma
     return (best - mu) * norm.cdf(z) + sigma * norm.pdf(z)
+
+
+def ehvi_improvements(ys: np.ndarray, ref: np.ndarray,
+                      cand: np.ndarray) -> np.ndarray:
+    """Exact 2-D hypervolume improvement of each candidate over the front.
+
+    One vectorized staircase sweep for the whole ``(M, 2)`` candidate set:
+    the nondominated front of ``ys`` (sorted by the first objective) defines
+    x-segments with constant cover height; a candidate's improvement is the
+    sum over segments of (uncovered width) × (uncovered height).  Equals
+    ``hypervolume_2d(ys ∪ {c}, ref) - hypervolume_2d(ys, ref)`` per
+    candidate, without M front re-sweeps.
+    """
+    cand = np.asarray(cand, float)
+    ys = np.asarray(ys, float)
+    ref = np.asarray(ref, float)
+    front = ys[np.all(ys < ref, axis=1)]
+    if len(front) == 0:
+        return (np.clip(ref[0] - cand[:, 0], 0.0, None)
+                * np.clip(ref[1] - cand[:, 1], 0.0, None))
+    front = front[nondominated_mask(front)]
+    front = front[np.argsort(front[:, 0])]
+    x, y = front[:, 0], front[:, 1]          # x ascending ⇒ y descending
+    # segment j covers [lows[j], ups[j]) with the front covering y-range
+    # [levels[j], ref1]; j = 0 is the uncovered strip left of the front
+    lows = np.concatenate(([-np.inf], x))
+    ups = np.concatenate((x, ref[0:1]))
+    levels = np.concatenate((ref[1:2], y))
+    width = np.clip(ups[None, :] - np.maximum(lows[None, :], cand[:, 0:1]),
+                    0.0, None)
+    height = np.clip(levels[None, :] - cand[:, 1:2], 0.0, None)
+    return np.sum(width * height, axis=1)
+
+
+def _ehvi_improvements_loop(ys: np.ndarray, ref: np.ndarray,
+                            cand: np.ndarray) -> np.ndarray:
+    """Reference per-candidate implementation (kept for equivalence tests)."""
+    base = hypervolume_2d(ys, ref)
+    return np.asarray([hypervolume_2d(np.vstack([ys, m[None]]), ref) - base
+                       for m in cand])
 
 
 class BayesOpt(SearchAlgorithm):
@@ -84,6 +146,18 @@ class BayesOpt(SearchAlgorithm):
         w = self.rng.dirichlet(np.ones(ys.shape[1]))
         return np.max(w * z, axis=1) + 0.05 * np.sum(w * z, axis=1)
 
+    def _take_best(self, pool: List[Dict], order: np.ndarray, n: int,
+                   out: List[Dict]) -> None:
+        """Append up to n unseen pool members in score order, pad randomly."""
+        for i in order:
+            if len(out) >= n:
+                return
+            if self._key(pool[i]) not in self._seen:
+                self._seen.add(self._key(pool[i]))
+                out.append(pool[i])
+        while len(out) < n:
+            out.append(self.space.sample(self.rng))
+
     def ask(self, n: int) -> List[Dict]:
         out: List[Dict] = []
         ys = self.observed_values()
@@ -98,32 +172,45 @@ class BayesOpt(SearchAlgorithm):
         xs = self.observed_points()
         pool = self._pool()
         xp = np.stack([self.space.encode(c) for c in pool])
-        for _ in range(n):
-            if self.strategy == "parego" or ys.shape[1] != 2:
-                s = self._scalarise(ys)
-                gp = GP().fit(xs, s)
-                mu, sig = gp.predict(xp)
-                score = expected_improvement(mu, sig, float(np.min(s)))
-            else:  # ehvi-greedy on posterior means
-                mus = []
-                for j in range(ys.shape[1]):
-                    mu, _ = GP().fit(xs, ys[:, j]).predict(xp)
-                    mus.append(mu)
-                mus = np.stack(mus, axis=1)
-                ref = ys.max(0) * 1.1 + 1e-9
-                base = hypervolume_2d(ys, ref)
-                score = np.asarray([
-                    hypervolume_2d(np.vstack([ys, m[None]]), ref) - base
-                    for m in mus])
-            order = np.argsort(-score)
-            for i in order:
-                if self._key(pool[i]) not in self._seen:
-                    self._seen.add(self._key(pool[i]))
-                    out.append(pool[i])
-                    break
-            else:
-                out.append(self.space.sample(self.rng))
+        gp = GP().fit_x(xs)   # one Cholesky for every pick in this ask
+
+        if self.strategy == "ehvi" and ys.shape[1] == 2:
+            # posterior means per objective (shared factor), then one
+            # vectorized incremental-HVI sweep scores the whole pool; the
+            # scores do not change between picks, so the n picks are simply
+            # the n best-scoring unseen candidates
+            mus = np.stack([gp.fit_y(ys[:, j]).predict(xp)[0]
+                            for j in range(ys.shape[1])], axis=1)
+            ref = ys.max(0) * 1.1 + 1e-9
+            score = ehvi_improvements(ys, ref, mus)
+            self._take_best(pool, np.argsort(-score), n, out)
+            return out
+
+        for _ in range(n):   # parego: fresh scalarisation per pick
+            s = self._scalarise(ys)
+            mu, sig = gp.fit_y(s).predict(xp)
+            score = expected_improvement(mu, sig, float(np.min(s)))
+            self._take_best(pool, np.argsort(-score), len(out) + 1, out)
         return out
+
+
+def pal_maybe_pareto(ys: np.ndarray, lcb: np.ndarray) -> np.ndarray:
+    """Vectorized "potentially Pareto-optimal" mask for PAL.
+
+    True where a candidate's optimistic (LCB) objective vector is not
+    dominated by any observed point — one ``(M, N, K)`` broadcast instead of
+    a Python loop over the pool.
+    """
+    dom = (np.all(ys[None, :, :] <= lcb[:, None, :], axis=2)
+           & np.any(ys[None, :, :] < lcb[:, None, :], axis=2))
+    return ~np.any(dom, axis=1)
+
+
+def _pal_maybe_pareto_loop(ys: np.ndarray, lcb: np.ndarray) -> np.ndarray:
+    """Reference list-comprehension version (kept for equivalence tests)."""
+    return np.asarray([
+        not np.any(np.all(ys <= l, axis=1) & np.any(ys < l, axis=1))
+        for l in lcb])
 
 
 class PAL(SearchAlgorithm):
@@ -159,19 +246,16 @@ class PAL(SearchAlgorithm):
                 keys.add(k)
                 pool.append(c)
         xp = np.stack([self.space.encode(c) for c in pool])
+        gp = GP().fit_x(xs)   # shared Cholesky across the per-objective fits
         mus, sigs = [], []
         for j in range(ys.shape[1]):
-            mu, sig = GP().fit(xs, ys[:, j]).predict(xp)
+            mu, sig = gp.fit_y(ys[:, j]).predict(xp)
             mus.append(mu)
             sigs.append(sig)
         mu = np.stack(mus, 1)
         sig = np.stack(sigs, 1)
         lcb = mu - self.beta * sig
-        # potentially Pareto-optimal = optimistic value not dominated by any
-        # observed point
-        maybe = np.asarray([
-            not np.any(np.all(ys <= l, axis=1) & np.any(ys < l, axis=1))
-            for l in lcb])
+        maybe = pal_maybe_pareto(ys, lcb)
         width = np.sum(sig, axis=1) * np.where(maybe, 1.0, 0.05)
         for i in np.argsort(-width):
             if len(out) >= n:

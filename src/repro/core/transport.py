@@ -8,6 +8,34 @@ requirement on real fleets; out of scope in this container, see DESIGN.md §2).
 
 ``LoopbackPair`` is an in-process queue transport with the same interface so
 unit tests and single-process exploration need no sockets.
+
+Batch wire format
+-----------------
+Scalar mode sends one testConfig dict per message and gets one result dict
+back — N configs cost 2N serialized messages plus N poll cycles.  The batched
+fast path frames a whole chunk into **one** message per direction, and —
+because every config/result in a chunk shares the same schema — transposes
+the payload into *columns* so each key is serialized once per frame instead
+of once per config:
+
+    host → client   {"cmd": "batchc", "n": N,
+                     "plain":  {"config_id": [...], "arch": [...], ...},
+                     "nested": {"knobs": {knob_name: [N values], ...}}}
+    client → host   same frame shape with result fields; "metrics" is the
+                    nested column.  Batch results omit the knobs/arch/shape
+                    echo — the host rehydrates them from its in-flight table,
+                    so the dominant result payload is just the metric columns.
+
+A chunk whose messages disagree on keys (e.g. nothing in common to
+transpose) falls back to the row frame {"cmd": "batch", "items": [...]};
+a *column* whose dict values disagree on sub-keys (e.g. ok metrics next to
+{"error": ...}) falls back to a row list for that column only.
+``push_many``/``pull_many`` do the (un)framing on top of the existing
+``push``/``pull`` primitives, so every transport implementation — ZMQ and
+loopback alike — gets batching without touching its socket code, and a
+batched host interoperates with a scalar peer: ``pull_many`` transparently
+wraps a lone scalar message into a one-element list, and a one-element
+``push_many`` degenerates to a plain ``push``.
 """
 from __future__ import annotations
 
@@ -16,6 +44,54 @@ import queue
 import threading
 from typing import Dict, List, Optional
 
+# frame markers for a list-of-messages payload (host→client carries
+# testConfigs, client→host carries results)
+BATCH_CMD = "batch"          # row frame: {"items": [dict, ...]}
+BATCH_COLS_CMD = "batchc"    # columnar frame: keys serialized once
+
+
+def frame_batch(msgs: List[dict]) -> dict:
+    """Frame a chunk, transposing to columns when the schema is uniform."""
+    keys = msgs[0].keys()
+    if any(m.keys() != keys for m in msgs[1:]):
+        return {"cmd": BATCH_CMD, "items": list(msgs)}
+    plain: Dict[str, list] = {}
+    nested: Dict[str, Dict[str, list]] = {}
+    for k in keys:
+        vals = [m[k] for m in msgs]
+        if isinstance(vals[0], dict):
+            sub = vals[0].keys()
+            if all(isinstance(v, dict) and v.keys() == sub for v in vals[1:]):
+                nested[k] = {s: [v[s] for v in vals] for s in sub}
+                continue
+        plain[k] = vals
+    return {"cmd": BATCH_COLS_CMD, "n": len(msgs),
+            "plain": plain, "nested": nested}
+
+
+def unframe_batch(msg: Optional[dict]) -> List[dict]:
+    """Normalise a pulled message to a list of payload dicts."""
+    if msg is None:
+        return []
+    cmd = msg.get("cmd")
+    if cmd == BATCH_CMD:
+        return list(msg["items"])
+    if cmd == BATCH_COLS_CMD:
+        items: List[dict] = [{} for _ in range(msg["n"])]
+        for k, col in msg["plain"].items():
+            for it, v in zip(items, col):
+                it[k] = v
+        for k, sub in msg["nested"].items():
+            if not sub:               # a column of uniformly-empty dicts
+                for it in items:
+                    it[k] = {}
+                continue
+            rebuilt = [dict(zip(sub.keys(), row)) for row in zip(*sub.values())]
+            for it, v in zip(items, rebuilt):
+                it[k] = v
+        return items
+    return [msg]
+
 
 class HostTransport:
     def push(self, client_id: int, msg: dict) -> None:
@@ -23,6 +99,17 @@ class HostTransport:
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         raise NotImplementedError
+
+    def push_many(self, client_id: int, msgs: List[dict]) -> None:
+        """Ship a whole chunk of testConfigs as one framed message."""
+        if len(msgs) == 1:
+            self.push(client_id, msgs[0])
+        elif msgs:
+            self.push(client_id, frame_batch(msgs))
+
+    def pull_many(self, timeout_s: float) -> List[dict]:
+        """Pull one message and unframe it: 0, 1, or many results."""
+        return unframe_batch(self.pull(timeout_s))
 
     def client_ids(self) -> List[int]:
         raise NotImplementedError
@@ -37,6 +124,16 @@ class ClientTransport:
 
     def push(self, msg: dict) -> None:
         raise NotImplementedError
+
+    def push_many(self, msgs: List[dict]) -> None:
+        """Ship a whole batch of results as one framed message."""
+        if len(msgs) == 1:
+            self.push(msgs[0])
+        elif msgs:
+            self.push(frame_batch(msgs))
+
+    def pull_many(self, timeout_s: float) -> List[dict]:
+        return unframe_batch(self.pull(timeout_s))
 
     def close(self) -> None:
         pass

@@ -39,6 +39,9 @@ def parse_args():
     p.add_argument("--out", default="results/explore.csv")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--timeout", type=float, default=600.0)
+    p.add_argument("--batch-size", type=int, default=None,
+                   help="configs per dispatched chunk (batched fast path); "
+                        "default: scalar one-config-per-message dispatch")
     return p.parse_args()
 
 
@@ -138,7 +141,8 @@ def main():
     algo = ALGORITHMS[args.algorithm](space, seed=args.seed)
     t0 = time.time()
     host.explore(algo, args.workload, args.shape, args.samples,
-                 objectives=("time_s", "power_w"), progress=True)
+                 objectives=("time_s", "power_w"), progress=True,
+                 batch_size=args.batch_size)
     host.stop_clients()
     dt = time.time() - t0
 
@@ -148,7 +152,8 @@ def main():
     ref = pts.max(0) * 1.1
     compiles = sum(c.n_compiled for c in clients)
     print(f"[explore] {len(ok)} configs in {dt:.1f}s "
-          f"({compiles} compiles, {len(ok)-compiles} cache hits)")
+          f"({len(ok) / max(dt, 1e-9):.1f} evals/s; {compiles} compiles, "
+          f"{len(ok)-compiles} cache hits)")
     print(f"[explore] pareto front size = {len(front)}, "
           f"hypervolume = {hypervolume(pts, ref):.4g}")
     print(f"[explore] time range  [{pts[:,0].min():.3f}, {pts[:,0].max():.3f}] s")

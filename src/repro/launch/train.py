@@ -81,6 +81,11 @@ def main():
     t0 = time.time()
     for step in range(start, args.steps):
         if step == args.fault_at:
+            if ck:
+                # crash at a step boundary with in-flight checkpoint IO
+                # drained — mid-write crashes are separately survivable via
+                # the tmp+rename atomic publish (restore ignores .tmp dirs)
+                ck.wait()
             print(f"[train] injected fault at step {step}", flush=True)
             raise SystemExit(42)
         batch = device_put_batch(data.batch(step), policy)

@@ -1,0 +1,106 @@
+"""Pure-pytest stand-in for the ``hypothesis`` API surface these tests use.
+
+The container does not ship ``hypothesis`` and nothing may be pip-installed,
+so the property tests fall back to this deterministic sampler: ``@given``
+draws ``max_examples`` seeded samples per strategy and runs the test body
+once per draw.  Only the strategies actually used by this suite are
+implemented (integers / floats / lists / tuples / sampled_from).  When the
+real ``hypothesis`` is available the test modules import it instead, so this
+shim never shadows the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class _StrategiesModule:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(min_value + (max_value - min_value) * rng.random()))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording max_examples; other hypothesis knobs are no-ops."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the wrapped test once per seeded draw of the strategies."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings sits *above* @given, so it stamps the attribute on this
+            # wrapper object — read it from the wrapper, not the inner fn
+            n = getattr(wrapper, "_propcheck_max_examples",
+                        getattr(fn, "_propcheck_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            # crc32, not hash(): str hash is salted per process and would make
+            # a CI failure unreproducible locally
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsified on example {i}: args={drawn} kwargs={drawn_kw}"
+                    ) from e
+            return None
+
+        # pytest must only see the leading (fixture) parameters — the trailing
+        # ones are filled from the right by the positional strategies, and the
+        # keyword ones by kw_strategies (mirrors hypothesis' fixture support)
+        params = list(inspect.signature(fn).parameters.values())
+        n_pos = len(strategies)
+        keep = [p for p in (params[:len(params) - n_pos] if n_pos else params)
+                if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

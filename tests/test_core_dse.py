@@ -5,7 +5,11 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _propcheck import given, settings, st
 
 from repro.core import (JClient, JConfig, JHost, JMemory, JPower, JTime,
                         RandomSearch, ResultStore, TestConfig, transport,

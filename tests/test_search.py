@@ -2,7 +2,11 @@
 a seeded synthetic problem (the paper's 'common benchmarking ground')."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _propcheck import given, settings, st
 
 from repro.core import (BayesOpt, GridSearch, NSGA2, PAL, RandomSearch,
                         nondominated_mask, tpu_pod_space)

@@ -119,7 +119,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.launch.mesh import make_mesh_dp_tp
 from repro.parallel.pipeline import pipeline_apply, bubble_fraction
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import _make
+mesh = _make((4,), ("pipe",))   # jax<0.5-compatible make_mesh
 n_stages, n_micro, mb, d = 4, 8, 2, 16
 
 def stage_fn(w, x):
@@ -150,7 +151,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.parallel.compress import psum_int8
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import _make
+mesh = _make((8,), ("data",))   # jax<0.5-compatible make_mesh
 x = jax.random.normal(jax.random.key(0), (8, 128))
 
 def f(x):
