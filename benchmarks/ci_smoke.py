@@ -1,0 +1,89 @@
+"""CI regression gate for the pipelined dispatch path.
+
+Runs a small exploration (50 configs by default) through the full
+JHost/DispatchScheduler loop over loopback — the pipelined and eager paths
+back-to-back per rep — checks every config completed ok, and fails (exit 1)
+on regression beyond ``SMOKE_TOLERANCE`` (default 30%) vs the checked-in
+baseline in ``benchmarks/smoke_baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.ci_smoke
+
+What is gated: the **median per-pair eager/pipelined wall ratio** — the
+pipeline's advantage over the barrier on this machine, right now.  A
+50-config exploration is a few ms of wall, so absolute evals/sec depends on
+the runner's speed and load far more than on the code; the interleaved
+ratio cancels that common mode, catching regressions that slow the
+pipelined path specifically (the point of this subsystem) on any hardware.
+Absolute evals/sec against the baseline is printed for the log, and becomes
+the gate instead when ``SMOKE_BASELINE`` (evals/sec) is set explicitly.
+A regression that slows both paths equally is caught by the absolute line
+in the log, not by the ratio gate.
+
+The baseline is recorded with the identical interleaved statistic:
+``SMOKE_RECORD=1 python -m benchmarks.run evalpath`` refreshes
+``benchmarks/smoke_baseline.json`` (explicit opt-in; ``results/`` is
+gitignored, so CI checkouts only see the benchmarks/ file).
+
+Env knobs: SMOKE_SAMPLES (default 50), SMOKE_TOLERANCE (default 0.30),
+SMOKE_BASELINE (absolute evals/sec gate override).
+"""
+import json
+import os
+import sys
+
+from benchmarks.common import REPO, evalpath_workload, smoke_measure
+
+N = int(os.environ.get("SMOKE_SAMPLES", "50"))
+TOLERANCE = float(os.environ.get("SMOKE_TOLERANCE", "0.30"))
+BASELINE_PATH = os.path.join(REPO, "benchmarks", "smoke_baseline.json")
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import TestConfig
+
+    space, jc, build = evalpath_workload()
+    rng = np.random.default_rng(0)
+    tcs = [TestConfig(i, "toy", "generate", space.sample(rng))
+           for i in range(N)]
+    wall_p, wall_e, ratio, recs = smoke_measure(tcs, jc, build)
+    bad = [cid for cid, r in recs.items() if r.status != "ok"]
+    if len(recs) != N or bad:
+        print(f"SMOKE FAIL: {len(recs)}/{N} configs, non-ok: {bad[:5]}")
+        return 1
+    eps = N / wall_p
+    print(f"smoke: {eps:.0f} pipelined evals/s over {N} configs "
+          f"({N / wall_e:.0f} eager; pipelined/eager ratio {ratio:.2f})")
+
+    override = os.environ.get("SMOKE_BASELINE")
+    if override is not None:        # explicit absolute gate
+        floor = float(override) * (1.0 - TOLERANCE)
+        verdict = "ok" if eps >= floor else "REGRESSION"
+        print(f"smoke: absolute gate {eps:.0f} vs floor {floor:.0f} "
+              f"(SMOKE_BASELINE={override}, tolerance {TOLERANCE:.0%}) "
+              f"-> {verdict}")
+        return 0 if eps >= floor else 1
+
+    try:
+        with open(BASELINE_PATH) as f:
+            baseline = json.load(f)
+        base_ratio = float(baseline["pipelined_vs_eager_ratio"])
+        base_eps = float(baseline["pipelined_smoke_evals_per_s"])
+    except (OSError, KeyError, ValueError, json.JSONDecodeError):
+        print("smoke: no checked-in baseline — passing (SMOKE_RECORD=1 "
+              "benchmarks.run evalpath records one)")
+        return 0
+
+    print(f"smoke: absolute {eps:.0f} vs {base_eps:.0f} baseline evals/s "
+          f"({eps / base_eps:.2f}x; informational — hardware-dependent)")
+    floor = base_ratio * (1.0 - TOLERANCE)
+    verdict = "ok" if ratio >= floor else "REGRESSION"
+    print(f"smoke: ratio gate {ratio:.2f} vs floor {floor:.2f} "
+          f"(baseline ratio {base_ratio:.2f}, tolerance {TOLERANCE:.0%}) "
+          f"-> {verdict}")
+    return 0 if ratio >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

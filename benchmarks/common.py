@@ -181,6 +181,185 @@ def run_evalpath(tcs, jc, build, batched: bool, reps: int = 3):
     return best
 
 
+class _FixedSearch:
+    """Replays a fixed list of knob dicts, in order (bench determinism:
+    every dispatch path sees the identical config sequence)."""
+
+    def __init__(self, knobs_list):
+        self._knobs = list(knobs_list)
+        self._i = 0
+
+    def ask(self, n):
+        out = self._knobs[self._i:self._i + n]
+        self._i += len(out)
+        return out
+
+    def tell(self, knobs, y):
+        pass
+
+
+from repro.core.transport import ClientTransport as _ClientTransportBase
+from repro.core.transport import HostTransport as _HostTransportBase
+
+
+class _LatencyHostTransport(_HostTransportBase):
+    """Simulated per-message network latency, host side (wraps a real
+    HostTransport; framing rides on push/pull exactly like the wrapped one).
+
+    Each pushed frame is stamped with a delivery time (now + a deterministic
+    jittered latency); the receiving side sleeps until the stamp before
+    handing the message over.  Because the stamp is set at *push* time, a
+    speculatively pushed chunk's latency overlaps with whatever the client
+    is still computing — exactly the overlap pipelined dispatch exploits and
+    barrier dispatch cannot.
+    """
+
+    def __init__(self, inner, base_s: float, jitter_s: float, seed: int = 0):
+        import numpy as np
+
+        self._inner = inner
+        self._base = base_s
+        self._jitter = jitter_s
+        self._rng = np.random.default_rng(seed)
+
+    def _lat(self):
+        return self._base + self._jitter * float(self._rng.random())
+
+    def push(self, client_id, msg):
+        import time as _t
+
+        self._inner.push(client_id,
+                         dict(msg, _deliver_at=_t.monotonic() + self._lat()))
+
+    def pull(self, timeout_s):
+        import time as _t
+
+        msg = self._inner.pull(timeout_s)
+        if msg is None:
+            return None
+        due = msg.pop("_deliver_at", None)
+        if due is not None:
+            _t.sleep(max(0.0, due - _t.monotonic()))
+        return msg
+
+    def client_ids(self):
+        return self._inner.client_ids()
+
+    def close(self):
+        self._inner.close()
+
+
+class _LatencyClientTransport(_ClientTransportBase):
+    """Client-side half of the simulated link (see _LatencyHostTransport)."""
+
+    def __init__(self, inner, base_s: float, jitter_s: float, seed: int = 1):
+        import numpy as np
+
+        self._inner = inner
+        self._base = base_s
+        self._jitter = jitter_s
+        self._rng = np.random.default_rng(seed)
+
+    def _lat(self):
+        return self._base + self._jitter * float(self._rng.random())
+
+    def pull(self, timeout_s):
+        import time as _t
+
+        msg = self._inner.pull(timeout_s)
+        if msg is None:
+            return None
+        due = msg.pop("_deliver_at", None)
+        if due is not None:
+            _t.sleep(max(0.0, due - _t.monotonic()))
+        return msg
+
+    def push(self, msg):
+        import time as _t
+
+        self._inner.push(dict(msg, _deliver_at=_t.monotonic() + self._lat()))
+
+    def close(self):
+        self._inner.close()
+
+
+def run_hostpath(tcs, jc, build, *, clients: int = 1, dispatch: str = "eager",
+                 batch_size: int = 25, chunk_budget_ms: float = None,
+                 codec: str = "json", latency_s: float = 0.0,
+                 jitter_s: float = 0.0, reps: int = 3,
+                 timeout_s: float = 120.0):
+    """Drive the full JHost/DispatchScheduler loop over loopback.
+
+    Replays exactly ``tcs``'s knobs via a fixed search, so every dispatch
+    path sees identical configs (config_id i ↔ tcs[i]).  Optional simulated
+    per-message latency (base + uniform jitter, deterministic) models a
+    fleet over a real network.  Returns (best_wall_s, {config_id: record}).
+    """
+    import threading
+    import time as _time
+
+    from repro.core import JClient, JHost, ResultStore, transport
+
+    best = None
+    for rep in range(reps):
+        pair = transport.LoopbackPair(clients, codec=codec)
+        for i in range(clients):
+            ct = pair.client(i)
+            if latency_s or jitter_s:
+                # later boards sit "farther away": heterogeneous latency
+                ct = _LatencyClientTransport(ct, latency_s * (1 + 0.5 * i),
+                                             jitter_s, seed=100 + i)
+            cl = JClient(jc, build, transport=ct, client_id=i, cache_size=256)
+            threading.Thread(target=cl.serve, kwargs=dict(poll_s=0.005),
+                             daemon=True).start()
+        ht = pair.host()
+        if latency_s or jitter_s:
+            ht = _LatencyHostTransport(ht, latency_s, jitter_s, seed=7)
+        host = JHost(ht, ResultStore(), timeout_s=timeout_s, poll_s=0.002)
+        search = _FixedSearch([tc.knobs for tc in tcs])
+        t0 = _time.perf_counter()
+        store = host.explore(search, tcs[0].arch, tcs[0].shape, len(tcs),
+                             batch_size=batch_size, dispatch=dispatch,
+                             chunk_budget_ms=chunk_budget_ms)
+        wall = _time.perf_counter() - t0
+        host.stop_clients()
+        recs = {r.config_id: r for r in store.records}
+        if best is None or wall < best[0]:
+            best = (wall, recs)
+    return best
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def smoke_measure(tcs, jc, build, reps: int = 15):
+    """Interleaved pipelined/eager measurement for the CI smoke gate.
+
+    A 50-config exploration is only a few ms of wall, so single runs are
+    dominated by scheduler/load noise, and even two medians taken minutes
+    (or machines) apart don't compare cleanly.  Each rep therefore runs the
+    pipelined and eager paths **back-to-back** — the same load window — and
+    the per-pair eager/pipelined wall ratio is the noise-cancelling
+    statistic: machine speed and transient load hit both paths alike.
+
+    Returns (median_pipelined_wall_s, median_eager_wall_s,
+    median_pair_ratio, pipelined_records).
+    """
+    pwalls, ewalls, ratios = [], [], []
+    recs = None
+    for _ in range(reps):
+        wp, recs = run_hostpath(tcs, jc, build, dispatch="pipelined",
+                                batch_size=10, chunk_budget_ms=5.0, reps=1)
+        we, _ = run_hostpath(tcs, jc, build, dispatch="eager",
+                             batch_size=10, reps=1)
+        pwalls.append(wp)
+        ewalls.append(we)
+        ratios.append(we / wp)
+    return _median(pwalls), _median(ewalls), _median(ratios), recs
+
+
 def scatter_png(store, path: str, title: str):
     """Paper Fig 2/4-style power-vs-time scatter, colored by the EMC-analogue."""
     try:

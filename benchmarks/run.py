@@ -16,7 +16,8 @@ import sys
 import time
 
 from benchmarks.common import (RESULTS, evalpath_workload, explore_generation,
-                               run_evalpath, scatter_png)
+                               run_evalpath, run_hostpath, scatter_png,
+                               smoke_measure)
 
 N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "200"))
 
@@ -27,12 +28,16 @@ N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "200"))
 
 
 def bench_evalpath():
-    """Scalar vs batched evaluations/sec on an hw-ladder-heavy random sweep.
+    """Evaluations/sec through the DSE loop, four ways over loopback.
 
-    Same N configs both ways through a serving JClient over loopback:
-    scalar = one testConfig per message (the seed protocol), batched = one
-    columnar frame + group-by-compile + vectorized measurement.  Metrics must
-    be bit-identical per config; derived = speedup (×).
+    Same N configs through: scalar = one testConfig per message (the seed
+    protocol), batched = one columnar frame direct to a JClient (PR 1's
+    framing), eager = the full JHost/scheduler loop with barrier dispatch
+    (PR 1's batched host path), pipelined = double-buffered dispatch +
+    adaptive chunk sizing.  Metrics must be bit-identical per config across
+    every path *and* across json/binary codecs; a jittered-latency
+    multi-client scenario measures how much the pipeline hides network
+    stalls.  derived = batched/scalar speedup (×), tracked since PR 1.
     """
     import numpy as np
 
@@ -51,16 +56,79 @@ def bench_evalpath():
         if r["metrics"] != res_b[cid]["metrics"]:
             raise RuntimeError(f"scalar/batched metrics diverge for {cid}: "
                                f"{r['metrics']} != {res_b[cid]['metrics']}")
+
+    # host-loop paths: eager barrier (PR 1) vs pipelined double-buffering,
+    # each under both wire codecs; all four must match the scalar metrics
+    batch = max(min(N_SAMPLES // 8, 25), 1)
+    walls = {}
+    for disp in ("eager", "pipelined"):
+        for cdc in ("json", "binary"):
+            wall, recs = run_hostpath(
+                tcs, jc, build, dispatch=disp, codec=cdc, batch_size=batch,
+                chunk_budget_ms=5.0 if disp == "pipelined" else None)
+            walls[(disp, cdc)] = wall
+            for cid, r in res_s.items():
+                if r["metrics"] != recs[cid].metrics:
+                    raise RuntimeError(
+                        f"{disp}/{cdc} metrics diverge for {cid}")
+    wall_e = min(walls[("eager", "json")], walls[("eager", "binary")])
+    wall_p = min(walls[("pipelined", "json")], walls[("pipelined", "binary")])
+
+    # multi-client fleet with per-client latency jitter: the pipelined path
+    # overlaps the wire latency with client compute, the barrier cannot
+    jbatch = max(min(N_SAMPLES // 16, 13), 1)
+    jitter_kw = dict(clients=2, batch_size=jbatch, latency_s=0.004,
+                     jitter_s=0.004, reps=2)
+    wall_je, _ = run_hostpath(tcs, jc, build, dispatch="eager", **jitter_kw)
+    wall_jp, _ = run_hostpath(tcs, jc, build, dispatch="pipelined",
+                              **jitter_kw)
+
+    # smoke-sized baseline for benchmarks.ci_smoke (same 50-config shape and
+    # rng stream, so the CI gate compares like against like)
+    smoke_tcs = tcs[:50] if len(tcs) >= 50 else tcs
+    wall_sm, wall_sme, smoke_ratio, _ = smoke_measure(smoke_tcs, jc, build)
+    # refreshing the checked-in CI gate baseline is explicit opt-in — a
+    # bench run on a loaded machine must not silently move the gate
+    if os.environ.get("SMOKE_RECORD") and len(smoke_tcs) == 50:
+        baseline_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                     "smoke_baseline.json")
+        with open(baseline_path, "w") as f:
+            json.dump({"pipelined_smoke_evals_per_s":
+                       round(len(smoke_tcs) / wall_sm, 1),
+                       "eager_smoke_evals_per_s":
+                       round(len(smoke_tcs) / wall_sme, 1),
+                       "pipelined_vs_eager_ratio": round(smoke_ratio, 3)},
+                      f, indent=2)
+            f.write("\n")
+        print(f"#   smoke baseline recorded -> {baseline_path}")
+
     eps_s, eps_b = N_SAMPLES / wall_s, N_SAMPLES / wall_b
+    eps_e, eps_p = N_SAMPLES / wall_e, N_SAMPLES / wall_p
     speedup = wall_s / wall_b
     print(f"# evalpath: {N_SAMPLES} configs, {unique_sw} unique sw points "
-          f"(hw-ladder-heavy), metrics bit-identical")
-    print(f"#   scalar : {eps_s:8.0f} evals/s  ({compiles_s} compiles, "
+          f"(hw-ladder-heavy), metrics bit-identical across "
+          f"eager/pipelined x json/binary")
+    print(f"#   scalar   : {eps_s:8.0f} evals/s  ({compiles_s} compiles, "
           f"{wall_s * 1e3:.1f} ms)")
-    print(f"#   batched: {eps_b:8.0f} evals/s  ({compiles_b} compiles, "
+    print(f"#   batched  : {eps_b:8.0f} evals/s  ({compiles_b} compiles, "
           f"{wall_b * 1e3:.1f} ms)")
-    print(f"#   speedup = {speedup:.2f}x")
-    return wall_b / N_SAMPLES * 1e6, speedup
+    print(f"#   eager    : {eps_e:8.0f} evals/s  (host loop, chunk={batch}, "
+          f"{wall_e * 1e3:.1f} ms)")
+    print(f"#   pipelined: {eps_p:8.0f} evals/s  (host loop, adaptive, "
+          f"{wall_p * 1e3:.1f} ms; {wall_e / wall_p:.2f}x vs eager)")
+    print(f"#   jittered fleet (2 clients, 4-8 ms/msg): eager "
+          f"{wall_je * 1e3:.0f} ms, pipelined {wall_jp * 1e3:.0f} ms "
+          f"-> {wall_je / wall_jp:.2f}x")
+    print(f"#   speedup = {speedup:.2f}x (batched vs scalar)")
+    return wall_b / N_SAMPLES * 1e6, speedup, {
+        "scalar_evals_per_s": round(eps_s, 1),
+        "batched_evals_per_s": round(eps_b, 1),
+        "eager_evals_per_s": round(eps_e, 1),
+        "pipelined_evals_per_s": round(eps_p, 1),
+        "pipelined_vs_eager": round(wall_e / wall_p, 3),
+        "jitter_speedup": round(wall_je / wall_jp, 3),
+        "pipelined_smoke_evals_per_s": round(len(smoke_tcs) / wall_sm, 1),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -219,8 +287,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     rows = {}
     for name in names:
-        us, derived = BENCHES[name]()
+        out = BENCHES[name]()
+        us, derived = out[0], out[1]
         rows[name] = {"us_per_call": round(us, 1), "derived": derived}
+        if len(out) > 2:            # extra named sub-metrics (evalpath rows)
+            rows[name].update(out[2])
         print(f"{name},{us:.1f},{derived:.6g}")
         sys.stdout.flush()
     os.makedirs(RESULTS, exist_ok=True)

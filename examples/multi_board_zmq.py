@@ -4,8 +4,13 @@
 
 Spawns two client *processes* (stand-ins for two Jetson boards / TPU slices),
 each binding a ZMQ PULL socket for configs and PUSHing results back to the
-host — the exact socket roles of paper §III.  The host runs NSGA-II and
-re-queues work if a board dies (kill a client mid-run to watch).
+host — the exact socket roles of paper §III.  The host runs NSGA-II through
+the **pipelined dispatch scheduler**: chunks of configs travel as single
+columnar frames in the compact binary codec, every board's queue is kept two
+chunks deep (no idle gap between a board's result push and its next pull),
+and chunk sizes adapt to each board's observed per-config wall time.  Work
+is re-queued if a board dies (kill a client mid-run to watch).  Each board
+reports its artifact-cache counters (``cache_info``) on exit.
 """
 import os
 import subprocess
@@ -34,11 +39,18 @@ def build(tc):
                     collectives={}, arg_bytes=10**9, temp_bytes=10**8,
                     output_bytes=10**6, n_devices=64), {}
 
+# the client stays codec-agnostic: it sniffs the host's frames and answers
+# in the same codec (binary here, since the host speaks binary)
 t = transport.ZmqClientTransport(f"tcp://127.0.0.1:{cfg_port}",
                                  f"tcp://127.0.0.1:{res_port}")
-served = JClient(jc, build, transport=t, client_id=cid).serve(poll_s=0.2,
-                                                              idle_limit_s=30)
-print(f"[board {cid}] served {served} configs", flush=True)
+client = JClient(jc, build, transport=t, client_id=cid)
+served = client.serve(poll_s=0.2, idle_limit_s=30)
+info = client.cache_info()
+print(f"[board {cid}] served {served} configs, compiled {client.n_compiled}; "
+      f"cache_info: hits={info['hits']} misses={info['misses']} "
+      f"evictions={info['evictions']} currsize={info['currsize']}", flush=True)
+t.close()
+t.close()   # close is idempotent — double-close in teardown paths is safe
 """
 CLIENT_CODE = ("SRC_PATH = %r\n" % os.path.abspath(SRC)) + CLIENT_CODE_TEMPLATE
 
@@ -55,21 +67,29 @@ def main():
 
     host_t = transport.ZmqHostTransport(
         f"tcp://*:{res_port}",
-        {i: f"tcp://127.0.0.1:{cfg_ports[i]}" for i in range(2)})
+        {i: f"tcp://127.0.0.1:{cfg_ports[i]}" for i in range(2)},
+        codec="binary")
     space = tpu_pod_space(n_chips=64)
     host = JHost(host_t, ResultStore(), timeout_s=20.0)
+    t0 = time.time()
     host.explore(NSGA2(space, seed=0, pop_size=12), "toy", "train_4k", 48,
-                 progress=True)
+                 progress=True, batch_size=6, dispatch="pipelined",
+                 chunk_budget_ms=250.0)
+    wall = time.time() - t0
     host.stop_clients()
 
     front = host.store.pareto_front(["time_s", "power_w"])
     by_client = {}
     for r in host.store.ok_records():
         by_client[r.client_id] = by_client.get(r.client_id, 0) + 1
-    print(f"explored 48 configs across boards {by_client}; "
-          f"pareto front = {len(front)} points")
+    stats = host.scheduler.stats()
+    print(f"explored 48 configs in {wall:.2f}s across boards {by_client}; "
+          f"pareto front = {len(front)} points; "
+          f"{stats['chunks_dispatched']:.0f} chunks "
+          f"(mean size {stats['mean_chunk']:.1f}, pipelined+binary)")
     for p in procs:
         p.wait(timeout=40)
+    host_t.close()
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ from repro.core.jmeasure import JMeasure, JTime, JPower, JMemory, DEFAULT_MEASUR
 from repro.core.jclient import JClient
 from repro.core.jhost import JHost
 from repro.core.results import ResultRecord, ResultStore, nondominated_mask
-from repro.core import transport
+from repro.core.scheduler import Chunk, ClientSlot, DispatchScheduler
+from repro.core import codec, transport
 from repro.core.search import (
     ALGORITHMS, SearchAlgorithm, RandomSearch, GridSearch, NSGA2, BayesOpt, PAL,
     hypervolume,

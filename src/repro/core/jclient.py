@@ -24,7 +24,12 @@ O(configs), and per-config Python/dict overhead collapses into a handful of
 numpy sweeps — metrics stay bit-identical to the scalar ``evaluate`` path.
 ``serve`` speaks both wire formats: a plain testConfig message is evaluated
 scalar; a ``{"cmd": "batch", "items": [...]}`` frame (see transport.py) runs
-``evaluate_batch`` and pushes one batched result frame back.
+``evaluate_batch`` and pushes one batched result frame back.  Under a
+double-buffering host (``dispatch="pipelined"``) several chunks may already
+be sitting in the transport queue when the client wakes up — ``serve``
+drains every queued batch frame first and coalesces them into a **single**
+``evaluate_batch`` call, so speculative chunks share one group-by-compile
+sweep and come back as one result frame.
 """
 from __future__ import annotations
 
@@ -168,6 +173,28 @@ class JClient:
         return results  # type: ignore[return-value]
 
     # -- Algorithm 1, JCLIENT procedure ---------------------------------------
+    def _drain_pending(self, first: dict):
+        """Coalesce every already-queued batch frame behind ``first``.
+
+        A pipelined host keeps ≥2 chunks in this client's queue; evaluating
+        them as one batch shares the group-by-compile sweep.  Returns
+        (batch_frames, scalar_msgs, stop_seen) in arrival order.
+        """
+        frames, scalars, stop = [first], [], False
+        while True:
+            nxt = self.transport.pull(0.0)
+            if nxt is None:
+                break
+            cmd = nxt.get("cmd")
+            if cmd == "stop":
+                stop = True
+                break
+            if cmd in (BATCH_CMD, BATCH_COLS_CMD):
+                frames.append(nxt)
+            else:
+                scalars.append(nxt)
+        return frames, scalars, stop
+
     def serve(self, poll_s: float = 1.0, idle_limit_s: Optional[float] = None) -> int:
         assert self.transport is not None, "serve() needs a transport"
         served = 0
@@ -183,7 +210,9 @@ class JClient:
             if msg.get("cmd") == "stop":
                 return served
             if msg.get("cmd") in (BATCH_CMD, BATCH_COLS_CMD):
-                tcs = [TestConfig.from_wire(d) for d in unframe_batch(msg)]
+                frames, scalars, stop = self._drain_pending(msg)
+                tcs = [TestConfig.from_wire(d)
+                       for f in frames for d in unframe_batch(f)]
                 # slim wire results: the host rehydrates knobs/arch/shape
                 # from its in-flight table, so don't echo them back
                 self.transport.push_many([
@@ -191,6 +220,11 @@ class JClient:
                      if k not in ("knobs", "arch", "shape")}
                     for r in self.evaluate_batch(tcs)])
                 served += len(tcs)
+                for m in scalars:   # scalar configs drained behind the frames
+                    self.transport.push(self.evaluate(TestConfig.from_wire(m)))
+                    served += 1
+                if stop:
+                    return served
                 continue
             result = self.evaluate(TestConfig.from_wire(msg))
             self.transport.push(result)

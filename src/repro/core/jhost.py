@@ -1,33 +1,37 @@
 """JHost — the host-side orchestrator (paper §III, Algorithm 1).
 
-Interfaces a user-defined search algorithm with N clients:
-  * batch dispatch — as many in-flight configs as there are free clients, so
-    batch-sampling search algorithms "work faster" (paper contribution 2);
-    with ``batch_size=B`` the host asks the search for client-count×B chunks
-    and ships each chunk as one framed transport message, and the client
-    answers with one batched result frame (the group-by-compile fast path);
-  * straggler mitigation / fault tolerance — every dispatched chunk carries a
-    deadline; on timeout the late client is quarantined and the chunk's
-    surviving configs are re-queued (split across whichever clients free up
-    next, up to ``max_retries`` per config).  Configs with retries remaining
-    are never dropped just because no client is free at sweep time — they
-    wait in a pending queue;
+Interfaces a user-defined search algorithm with N clients.  Since the
+scheduler refactor, JHost is a thin facade: all dispatch, requeue, deadline,
+and client-freeing state lives in ``repro.core.scheduler.DispatchScheduler``
+(explicit ``Chunk``/``ClientSlot`` state machines, testable without threads
+or transports); JHost's loop just moves data between the search algorithm,
+the transport, the scheduler, and the ResultStore:
+
+  * batch dispatch — the scheduler asks for ``batch_size``-config chunks per
+    free client (``dispatch="eager"``, PR 1's barrier), or keeps every
+    client's queue two chunks deep (``dispatch="pipelined"`` double-
+    buffering, so clients never idle between result push and next pull);
+  * adaptive chunk sizing — with ``chunk_budget_ms`` the static batch_size
+    is replaced by a per-client EWMA-targeted wall-time budget per chunk;
+  * straggler mitigation / fault tolerance — every chunk carries a deadline;
+    on timeout the late client is quarantined and surviving configs are
+    re-queued (up to ``max_retries`` per config), waiting in the pending
+    queue if no client is free at sweep time;
   * result saving — every result lands in a ResultStore (CSV streaming).
 
-Scalar mode (``batch_size=None``) is the degenerate chunk-of-1 case and keeps
-the original one-testConfig-per-message wire format.
+Scalar mode (``batch_size=None``, eager) is the degenerate chunk-of-1 case
+and keeps the original one-testConfig-per-message wire format.
 """
 from __future__ import annotations
 
 import itertools
-import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.jconfig import TestConfig
 from repro.core.results import ResultRecord, ResultStore
+from repro.core.scheduler import DispatchScheduler
 from repro.core.search.base import SearchAlgorithm
 from repro.core.transport import HostTransport
 
@@ -44,119 +48,71 @@ class JHost:
         self.max_retries = max_retries
         self.poll_s = poll_s
         self.quarantined: set = set()
+        self.scheduler: Optional[DispatchScheduler] = None
 
     # -- Algorithm 1, JHOST procedure -----------------------------------------
     def explore(self, search: SearchAlgorithm, arch: str, shape: str,
                 n_samples: int,
                 objectives: Sequence[str] = ("time_s", "power_w"),
                 progress: bool = False,
-                batch_size: Optional[int] = None) -> ResultStore:
-        chunk = max(int(batch_size or 1), 1)
+                batch_size: Optional[int] = None,
+                dispatch: str = "eager",
+                chunk_budget_ms: Optional[float] = None,
+                scheduler: Optional[DispatchScheduler] = None) -> ResultStore:
+        sched = scheduler if scheduler is not None else DispatchScheduler(
+            self.transport.client_ids(), policy=dispatch,
+            timeout_s=self.timeout_s, max_retries=self.max_retries,
+            batch_size=batch_size,
+            chunk_budget_s=(None if chunk_budget_ms is None
+                            else chunk_budget_ms / 1e3))
+        self.scheduler = sched
+        self.quarantined = sched.quarantined   # shared set, stays live
         ids = itertools.count()
-        bids = itertools.count()
-        free: List[int] = [c for c in self.transport.client_ids()]
-        # configs awaiting (re)dispatch: fresh asks and timed-out survivors
-        pending: Deque[Tuple[TestConfig, int]] = deque()
-        inflight: Dict[int, dict] = {}      # config_id -> {tc, batch, retries}
-        batches: Dict[int, dict] = {}       # batch_id -> {client, deadline, awaiting}
-        client_batch: Dict[int, int] = {}   # client -> its current batch_id
         issued = completed = 0
 
-        def dispatch(items: List[Tuple[TestConfig, int]]) -> None:
-            client = free.pop(0)
-            self.transport.push_many(client, [tc.to_wire() for tc, _ in items])
-            bid = next(bids)
-            batches[bid] = {
-                "client": client,
-                # the deadline covers the whole chunk: a B-config batch gets
-                # B× the single-config budget
-                "deadline": time.monotonic() + self.timeout_s * len(items),
-                # configs this client has not answered *itself* yet — the
-                # client is freed only once this empties, even when a late
-                # straggler answers some of its configs first
-                "awaiting": {tc.config_id for tc, _ in items},
-            }
-            client_batch[client] = bid
-            for tc, retries in items:
-                inflight[tc.config_id] = {"tc": tc, "batch": bid,
-                                          "retries": retries}
-
         while completed < n_samples:
-            # top up the pending queue with fresh asks, then fill free clients
-            want = min(n_samples - issued,
-                       max(len(free) * chunk - len(pending), 0))
+            # top up the pending queue with fresh asks, then fill pipelines
+            want = min(n_samples - issued, sched.want())
             if want > 0:
                 for knobs in search.ask(want):
-                    pending.append((TestConfig(next(ids), arch, shape, knobs),
-                                    self.max_retries))
+                    sched.submit(TestConfig(next(ids), arch, shape, knobs))
                     issued += 1
-            while free and pending:
-                dispatch([pending.popleft()
-                          for _ in range(min(chunk, len(pending)))])
+            for client, tcs in sched.next_dispatches():
+                self.transport.push_many(client, [tc.to_wire() for tc in tcs])
 
             msgs = self.transport.pull_many(self.poll_s)
-            now = time.monotonic()
-
+            if msgs:
+                sched.note_results()   # frame boundary: coalescing detection
             for msg in msgs:
-                cid = msg["config_id"]
-                info = inflight.pop(cid, None)
-                if info is not None:        # first answer for this config
-                    if "knobs" not in msg:  # slim batch result: rehydrate echo
-                        tc = info["tc"]
-                        msg["knobs"], msg["arch"], msg["shape"] = \
-                            tc.knobs, tc.arch, tc.shape
-                    rec = ResultRecord.from_wire(msg)
-                    self.store.add(rec)
-                    completed += 1
-                    if rec.status == "ok":
-                        y = np.asarray([rec.metrics[k] for k in objectives],
-                                       float)
-                        search.tell(rec.knobs, y)
-                    if progress and completed % 10 == 0:
-                        print(f"[jhost] {completed}/{n_samples} "
-                              f"(inflight={len(inflight)}, free={len(free)}, "
-                              f"pending={len(pending)})")
-                # owner bookkeeping runs even for duplicate answers: the
-                # *reporting* client finished this config either way, and is
-                # freed exactly when it has answered its whole chunk itself
-                reporter = msg.get("client_id")
-                if reporter is None and info is not None:
-                    reporter = batches.get(info["batch"], {}).get("client")
-                bid = client_batch.get(reporter)
-                if bid is not None:
-                    batch = batches[bid]
-                    batch["awaiting"].discard(cid)
-                    if not batch["awaiting"]:
-                        del batches[bid]
-                        del client_batch[reporter]
-                        if reporter not in self.quarantined:
-                            free.append(reporter)
-
-            # straggler sweep: expire whole batches, requeue their survivors
-            for bid, batch in list(batches.items()):
-                if now <= batch["deadline"]:
+                tc = sched.on_result(msg)
+                if tc is None:          # duplicate answer: bookkeeping only
                     continue
-                del batches[bid]
-                client_batch.pop(batch["client"], None)
-                self.quarantined.add(batch["client"])
-                for cid in sorted(batch["awaiting"]):
-                    info = inflight.get(cid)
-                    if info is None or info["batch"] != bid:
-                        continue  # already answered (possibly by a late peer)
-                    del inflight[cid]
-                    if info["retries"] > 0:
-                        # survivors wait for the next free client instead of
-                        # being dropped as terminal timeouts
-                        pending.append((info["tc"], info["retries"] - 1))
-                    else:
-                        self.store.add(ResultRecord(
-                            config_id=cid, arch=arch, shape=shape,
-                            knobs=info["tc"].knobs, metrics={},
-                            status="timeout", client_id=batch["client"]))
-                        completed += 1
+                if "knobs" not in msg:  # slim batch result: rehydrate echo
+                    msg["knobs"], msg["arch"], msg["shape"] = \
+                        tc.knobs, tc.arch, tc.shape
+                rec = ResultRecord.from_wire(msg)
+                self.store.add(rec)
+                completed += 1
+                if rec.status == "ok":
+                    y = np.asarray([rec.metrics[k] for k in objectives],
+                                   float)
+                    search.tell(rec.knobs, y)
+                if progress and completed % 10 == 0:
+                    s = sched.stats()
+                    print(f"[jhost] {completed}/{n_samples} "
+                          f"(inflight={s['inflight']:.0f}, "
+                          f"pending={s['pending']:.0f}, "
+                          f"chunk~{s['mean_chunk']:.1f})")
 
-            if (not inflight and not free and not client_batch
-                    and completed < n_samples):
+            # straggler sweep: requeue survivors, record terminal timeouts
+            for tc, client in sched.expire():
+                self.store.add(ResultRecord(
+                    config_id=tc.config_id, arch=arch, shape=shape,
+                    knobs=tc.knobs, metrics={}, status="timeout",
+                    client_id=client))
+                completed += 1
+
+            if completed < n_samples and sched.stuck():
                 raise RuntimeError("all clients quarantined; exploration stuck")
         return self.store
 

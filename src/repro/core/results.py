@@ -46,12 +46,31 @@ def nondominated_mask(points: np.ndarray) -> np.ndarray:
 
 
 class ResultStore:
-    def __init__(self, csv_path: Optional[str] = None):
+    """Streaming record sink.
+
+    The CSV schema is the **union** of every knob/metric key seen so far —
+    not whatever the first record happened to carry (a leading timeout/failed
+    record with empty metrics used to freeze a header without ``metric.*``
+    columns, silently dropping every later metric via extrasaction=ignore).
+    When a record introduces a new column, the file is rewritten in place
+    with the widened header; pre-seed ``knob_names``/``metric_names`` (e.g.
+    from the design space + objectives) to avoid rewrites entirely.
+    """
+
+    _BASE_FIELDS = ("config_id", "arch", "shape", "status", "client_id",
+                    "cached", "wall_s")
+
+    def __init__(self, csv_path: Optional[str] = None,
+                 knob_names: Sequence[str] = (),
+                 metric_names: Sequence[str] = ()):
         self.records: List[ResultRecord] = []
         self._csv_path = csv_path
         self._lock = threading.Lock()
         self._csv_file = None
         self._csv_writer = None
+        self._knob_names = set(knob_names)
+        self._metric_names = set(metric_names)
+        self._written_rows: List[Dict[str, Any]] = []   # rows on disk
 
     def add(self, rec: ResultRecord) -> None:
         with self._lock:
@@ -60,11 +79,10 @@ class ResultStore:
                 self._append_csv(rec)
 
     # -- CSV ---------------------------------------------------------------
-    def _fieldnames(self, rec: ResultRecord) -> List[str]:
-        return (["config_id", "arch", "shape", "status", "client_id", "cached",
-                 "wall_s"]
-                + [f"knob.{k}" for k in sorted(rec.knobs)]
-                + [f"metric.{k}" for k in sorted(rec.metrics)])
+    def _fieldnames(self) -> List[str]:
+        return (list(self._BASE_FIELDS)
+                + [f"knob.{k}" for k in sorted(self._knob_names)]
+                + [f"metric.{k}" for k in sorted(self._metric_names)])
 
     def _flatten(self, rec: ResultRecord) -> Dict[str, Any]:
         row = {"config_id": rec.config_id, "arch": rec.arch, "shape": rec.shape,
@@ -74,25 +92,59 @@ class ResultStore:
         row.update({f"metric.{k}": v for k, v in rec.metrics.items()})
         return row
 
+    def _adopt_existing_csv(self) -> None:
+        """Resume-append: fold a pre-existing file's header/rows into ours."""
+        if self._written_rows:
+            return      # already writing this file (e.g. re-opened after close)
+        if not (os.path.exists(self._csv_path)
+                and os.path.getsize(self._csv_path) > 0):
+            return
+        with open(self._csv_path, newline="") as f:
+            reader = csv.DictReader(f)
+            for name in reader.fieldnames or []:
+                if name.startswith("knob."):
+                    self._knob_names.add(name[len("knob."):])
+                elif name.startswith("metric."):
+                    self._metric_names.add(name[len("metric."):])
+            self._written_rows.extend(reader)
+
+    def _open_writer(self, mode: str) -> None:
+        if self._csv_file is not None:
+            self._csv_file.close()
+        self._csv_file = open(self._csv_path, mode, newline="")
+        self._csv_writer = csv.DictWriter(
+            self._csv_file, fieldnames=self._fieldnames(),
+            extrasaction="ignore")
+
     def _append_csv(self, rec: ResultRecord) -> None:
-        new = not os.path.exists(self._csv_path) or os.path.getsize(self._csv_path) == 0
         if self._csv_writer is None:
             os.makedirs(os.path.dirname(self._csv_path) or ".", exist_ok=True)
-            self._csv_file = open(self._csv_path, "a", newline="")
-            self._csv_writer = csv.DictWriter(
-                self._csv_file, fieldnames=self._fieldnames(rec), extrasaction="ignore")
-            if new:
-                self._csv_writer.writeheader()
-        self._csv_writer.writerow(self._flatten(rec))
+            self._adopt_existing_csv()
+        new_knobs = set(rec.knobs) - self._knob_names
+        new_metrics = set(rec.metrics) - self._metric_names
+        if self._csv_writer is None or new_knobs or new_metrics:
+            # widen the schema and rewrite everything written so far — a
+            # frozen header would silently drop the new columns forever
+            self._knob_names |= new_knobs
+            self._metric_names |= new_metrics
+            self._open_writer("w")
+            self._csv_writer.writeheader()
+            self._csv_writer.writerows(self._written_rows)
+        row = self._flatten(rec)
+        self._csv_writer.writerow(row)
+        self._written_rows.append(row)
         self._csv_file.flush()
 
     def to_csv(self, path: str) -> None:
         if not self.records:
             return
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        knobs = sorted({k for r in self.records for k in r.knobs})
+        metrics = sorted({k for r in self.records for k in r.metrics})
+        fields = (list(self._BASE_FIELDS) + [f"knob.{k}" for k in knobs]
+                  + [f"metric.{k}" for k in metrics])
         with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=self._fieldnames(self.records[0]),
-                               extrasaction="ignore")
+            w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
             w.writeheader()
             for r in self.records:
                 w.writerow(self._flatten(r))

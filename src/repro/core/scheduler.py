@@ -1,0 +1,320 @@
+"""Event-driven dispatch scheduler — the host-side orchestration core.
+
+``JHost.explore`` used to be one monolithic loop owning dispatch, requeue,
+deadline, and client-freeing state; this module extracts that state into an
+explicitly-testable ``DispatchScheduler`` built from two small state
+machines:
+
+* ``Chunk``      — a dispatched group of testConfigs: which client owns it,
+  the deadline by which that client must answer it, and the config_ids the
+  owner has not answered *itself* yet (a late straggler answering some of a
+  chunk's configs records their results but does not free the owner early).
+* ``ClientSlot`` — per-client pipeline state: the FIFO of chunk_ids queued
+  on that client, an EWMA of observed per-config wall time, and quarantine.
+
+Dispatch policies
+-----------------
+``eager``     — depth-1: a client receives its next chunk only after fully
+  answering its current one (PR 1's batched barrier; ``batch_size=None``
+  with this policy is the seed's scalar protocol).
+``pipelined`` — depth-2 double-buffering: the scheduler keeps every healthy
+  client's config queue two chunks deep, so the next chunk is already
+  sitting in the client's transport queue when it finishes the current one —
+  the client never idles between its result push and next pull.  Per-chunk
+  deadlines stack (a queued chunk's clock starts where its predecessor's
+  budget ends) and straggler requeue fails over *all* chunks queued on a
+  quarantined client.
+
+Adaptive chunk sizing
+---------------------
+With ``chunk_budget_s`` set, the scheduler replaces the static
+``batch_size`` by targeting a wall-time budget per chunk: each completed
+chunk updates the owner's EWMA of per-config wall time (measured from when
+the client could *start* the chunk, so queue wait in pipelined mode is not
+counted), and the next chunk dispatched to that client is sized
+``budget / ewma`` (clamped).  Fast clients get bigger chunks, slow or
+jittery clients get smaller ones, and no client holds a chunk much longer
+than the budget — which bounds straggler-detection latency too.
+
+The scheduler is transport-free and clock-injectable: the host pushes the
+chunks ``next_dispatches()`` returns, feeds every pulled result to
+``on_result()``, and calls ``expire()`` each poll; unit tests drive the same
+API with a fake clock and no threads.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
+                    Tuple)
+
+from repro.core.jconfig import TestConfig
+
+POLICIES = ("eager", "pipelined")
+
+
+class Chunk:
+    """One dispatched chunk: owner, deadline, and unanswered config_ids."""
+
+    __slots__ = ("chunk_id", "client", "deadline", "awaiting", "size",
+                 "started_at", "started_seq")
+
+    def __init__(self, chunk_id: int, client: int, deadline: float,
+                 awaiting: Set[int], started_at: Optional[float]):
+        self.chunk_id = chunk_id
+        self.client = client
+        self.deadline = deadline
+        self.awaiting = awaiting
+        self.size = len(awaiting)
+        # when the client could begin working on it: dispatch time for the
+        # pipeline head, else set when the predecessor chunk completes (None
+        # while queued behind another chunk)
+        self.started_at = started_at
+        # which result batch (pull sequence) marked it started, if any —
+        # used to detect client-side chunk coalescing (see _complete_chunk)
+        self.started_seq: Optional[int] = None
+
+
+class ClientSlot:
+    """Per-client pipeline: queued chunks, wall-time EWMA, quarantine."""
+
+    __slots__ = ("client_id", "depth_target", "chunks", "ewma_per_cfg_s",
+                 "quarantined", "ewma_prev", "obs_start", "obs_configs")
+
+    def __init__(self, client_id: int, depth_target: int):
+        self.client_id = client_id
+        self.depth_target = depth_target
+        self.chunks: List[int] = []         # FIFO of chunk_ids
+        self.ewma_per_cfg_s: Optional[float] = None
+        self.quarantined = False
+        # last EWMA observation, kept revisable: when the client coalesced
+        # queued chunks into one evaluate_batch, the successor chunk
+        # completes in the same result frame with ~zero measured duration —
+        # the predecessor's span covered its work, so the observation is
+        # re-done over the combined configs instead of recording a bogus
+        # near-zero sample that would deflate the EWMA
+        self.ewma_prev: Optional[float] = None
+        self.obs_start: Optional[float] = None
+        self.obs_configs: int = 0
+
+    def open_chunks(self) -> int:
+        return 0 if self.quarantined else max(
+            self.depth_target - len(self.chunks), 0)
+
+
+class DispatchScheduler:
+    def __init__(self, client_ids: Sequence[int], *,
+                 policy: str = "eager",
+                 timeout_s: float = 600.0,
+                 max_retries: int = 2,
+                 batch_size: Optional[int] = None,
+                 chunk_budget_s: Optional[float] = None,
+                 min_chunk: int = 1,
+                 max_chunk: int = 512,
+                 ewma_alpha: float = 0.25,
+                 clock: Callable[[], float] = time.monotonic):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        depth = 2 if policy == "pipelined" else 1
+        self.policy = policy
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.chunk_budget_s = chunk_budget_s
+        self.min_chunk = min_chunk
+        self.max_chunk = max_chunk
+        self.ewma_alpha = ewma_alpha
+        self.clock = clock
+        # before any EWMA exists: the static batch_size, or a modest seed
+        # chunk when only a budget was given (it adapts from there)
+        self.base_chunk = max(int(batch_size or (8 if chunk_budget_s else 1)), 1)
+        self.slots: Dict[int, ClientSlot] = {
+            c: ClientSlot(c, depth) for c in client_ids}
+        self.pending: Deque[Tuple[TestConfig, int]] = deque()
+        self.inflight: Dict[int, dict] = {}   # config_id -> {tc, chunk, retries}
+        self.chunks: Dict[int, Chunk] = {}
+        self.quarantined: Set[int] = set()
+        self._chunk_ids = itertools.count()
+        self._pull_seq = 0
+        self.n_chunks_dispatched = 0
+        self.n_configs_dispatched = 0
+
+    # -- sizing ---------------------------------------------------------------
+    def chunk_size_for(self, slot: ClientSlot) -> int:
+        if self.chunk_budget_s is not None and slot.ewma_per_cfg_s:
+            want = int(round(self.chunk_budget_s / slot.ewma_per_cfg_s))
+            return max(self.min_chunk, min(want, self.max_chunk))
+        return self.base_chunk
+
+    # -- intake ---------------------------------------------------------------
+    def want(self) -> int:
+        """Fresh configs needed to fill every healthy client's pipeline."""
+        capacity = sum(s.open_chunks() * self.chunk_size_for(s)
+                       for s in self.slots.values())
+        return max(capacity - len(self.pending), 0)
+
+    def submit(self, tc: TestConfig) -> None:
+        self.pending.append((tc, self.max_retries))
+
+    # -- dispatch -------------------------------------------------------------
+    def next_dispatches(self) -> List[Tuple[int, List[TestConfig]]]:
+        """Chunks ready to ship: (client_id, configs), pipeline-fair."""
+        out: List[Tuple[int, List[TestConfig]]] = []
+        progress = True
+        while self.pending and progress:
+            progress = False
+            # one chunk per slot per pass keeps clients evenly loaded
+            for slot in self.slots.values():
+                if not self.pending:
+                    break
+                if slot.open_chunks() == 0:
+                    continue
+                size = min(self.chunk_size_for(slot), len(self.pending))
+                items = [self.pending.popleft() for _ in range(size)]
+                out.append((slot.client_id, self._dispatch(slot, items)))
+                progress = True
+        return out
+
+    def _dispatch(self, slot: ClientSlot,
+                  items: List[Tuple[TestConfig, int]]) -> List[TestConfig]:
+        now = self.clock()
+        chunk_id = next(self._chunk_ids)
+        if slot.chunks:
+            # a queued chunk's budget starts where its predecessor's ends:
+            # the client cannot have begun it yet
+            base = max(now, self.chunks[slot.chunks[-1]].deadline)
+            started = None
+        else:
+            base = now
+            started = now
+        chunk = Chunk(chunk_id, slot.client_id,
+                      deadline=base + self.timeout_s * len(items),
+                      awaiting={tc.config_id for tc, _ in items},
+                      started_at=started)
+        self.chunks[chunk_id] = chunk
+        slot.chunks.append(chunk_id)
+        for tc, retries in items:
+            self.inflight[tc.config_id] = {"tc": tc, "chunk": chunk_id,
+                                           "retries": retries}
+        self.n_chunks_dispatched += 1
+        self.n_configs_dispatched += len(items)
+        return [tc for tc, _ in items]
+
+    # -- results --------------------------------------------------------------
+    def note_results(self) -> None:
+        """Mark a result-frame boundary (one pulled wire frame).
+
+        The host calls this once before feeding each pull's messages to
+        ``on_result``.  Chunks that both *start* and *complete* inside the
+        same frame were coalesced by the client into the predecessor's
+        evaluate_batch — their wall time belongs to the predecessor's span.
+        """
+        self._pull_seq += 1
+
+    def on_result(self, msg: dict) -> Optional[TestConfig]:
+        """Feed one pulled result message.
+
+        Returns the TestConfig if this is the *first* answer for the config
+        (the host records it, rehydrating a slim echo from the returned tc),
+        or None for duplicates.  Owner bookkeeping runs either way: the
+        reporting client finished this config, and is topped up exactly when
+        it has answered its whole chunk itself.
+        """
+        cid = msg.get("config_id")
+        info = self.inflight.pop(cid, None) if cid is not None else None
+        tc = info["tc"] if info is not None else None
+        reporter = msg.get("client_id")
+        if reporter is None and info is not None:
+            owner = self.chunks.get(info["chunk"])
+            reporter = owner.client if owner is not None else None
+        slot = self.slots.get(reporter)
+        if slot is not None:
+            for chunk_id in list(slot.chunks):
+                chunk = self.chunks[chunk_id]
+                if cid in chunk.awaiting:
+                    chunk.awaiting.discard(cid)
+                    if not chunk.awaiting:
+                        self._complete_chunk(slot, chunk)
+                    break
+        return tc
+
+    def _complete_chunk(self, slot: ClientSlot, chunk: Chunk) -> None:
+        now = self.clock()
+        del self.chunks[chunk.chunk_id]
+        slot.chunks.remove(chunk.chunk_id)
+        if chunk.started_at is not None:
+            if (chunk.started_seq is not None
+                    and chunk.started_seq == self._pull_seq
+                    and slot.obs_start is not None):
+                # coalesced: started *and* completed inside the same result
+                # frame — the predecessor's span already covered this work.
+                # Revise the previous observation over the combined configs
+                # instead of recording a bogus near-zero sample.
+                slot.ewma_per_cfg_s = slot.ewma_prev
+                slot.obs_configs += chunk.size
+            else:
+                slot.ewma_prev = slot.ewma_per_cfg_s
+                slot.obs_start = chunk.started_at
+                slot.obs_configs = chunk.size
+            per_cfg = max((now - slot.obs_start) / slot.obs_configs, 1e-9)
+            if slot.ewma_per_cfg_s is None:
+                slot.ewma_per_cfg_s = per_cfg
+            else:
+                slot.ewma_per_cfg_s = (self.ewma_alpha * per_cfg
+                                       + (1 - self.ewma_alpha)
+                                       * slot.ewma_per_cfg_s)
+        if slot.chunks:                       # successor starts now
+            head = self.chunks[slot.chunks[0]]
+            if head.started_at is None:
+                head.started_at = now
+                head.started_seq = self._pull_seq
+
+    # -- deadlines ------------------------------------------------------------
+    def expire(self) -> List[Tuple[TestConfig, int]]:
+        """Straggler sweep.  Quarantines clients that blew a chunk deadline
+        and fails over every chunk queued on them: survivors with retries
+        left rejoin the pending queue; the rest are returned as terminal
+        ``(tc, client_id)`` timeouts for the host to record."""
+        now = self.clock()
+        terminal: List[Tuple[TestConfig, int]] = []
+        for chunk_id in list(self.chunks):
+            chunk = self.chunks.get(chunk_id)
+            if chunk is None or now <= chunk.deadline:
+                continue
+            slot = self.slots[chunk.client]
+            slot.quarantined = True
+            self.quarantined.add(chunk.client)
+            # the client is gone: chunks queued behind the expired one would
+            # never be answered either — fail them all over at once
+            for dead_id in list(slot.chunks):
+                dead = self.chunks.pop(dead_id)
+                for cfg_id in sorted(dead.awaiting):
+                    info = self.inflight.get(cfg_id)
+                    if info is None or info["chunk"] != dead_id:
+                        continue      # already answered (maybe by a peer)
+                    del self.inflight[cfg_id]
+                    if info["retries"] > 0:
+                        self.pending.append((info["tc"], info["retries"] - 1))
+                    else:
+                        terminal.append((info["tc"], chunk.client))
+            slot.chunks.clear()
+        return terminal
+
+    # -- introspection --------------------------------------------------------
+    def stuck(self) -> bool:
+        """No work can ever complete: nothing in flight, everyone dead."""
+        return (not self.chunks
+                and all(s.quarantined for s in self.slots.values()))
+
+    def stats(self) -> Dict[str, float]:
+        busy = sum(1 for s in self.slots.values() if s.chunks)
+        return {
+            "pending": len(self.pending),
+            "inflight": len(self.inflight),
+            "chunks": len(self.chunks),
+            "busy_clients": busy,
+            "quarantined": len(self.quarantined),
+            "chunks_dispatched": self.n_chunks_dispatched,
+            "mean_chunk": (self.n_configs_dispatched
+                           / max(self.n_chunks_dispatched, 1)),
+        }

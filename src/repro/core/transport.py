@@ -36,13 +36,23 @@ loopback alike — gets batching without touching its socket code, and a
 batched host interoperates with a scalar peer: ``pull_many`` transparently
 wraps a lone scalar message into a one-element list, and a one-element
 ``push_many`` degenerates to a plain ``push``.
+
+Codec layer
+-----------
+How a framed dict becomes wire bytes is pluggable per transport
+(``codec="json"`` | ``"binary"`` | a ``repro.core.codec.Codec`` instance).
+The binary codec packs a columnar frame's numeric columns as typed arrays —
+see ``repro.core.codec``.  Every receive path decodes by sniffing
+(``decode_wire``), so mixed fleets interoperate; client transports
+additionally answer in the codec of the last frame they received, so a
+binary host gets binary results back from a json-configured client.
 """
 from __future__ import annotations
 
-import json
 import queue
-import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
+
+from repro.core.codec import (Codec, decode_wire, resolve_codec, sniff_codec)
 
 # frame markers for a list-of-messages payload (host→client carries
 # testConfigs, client→host carries results)
@@ -119,6 +129,16 @@ class HostTransport:
 
 
 class ClientTransport:
+    # wire-codec negotiation: answer in the codec the host last spoke
+    _codec: Codec = resolve_codec("json")
+    _peer_codec: Optional[Codec] = None
+
+    def _note_wire(self, data) -> None:
+        self._peer_codec = resolve_codec(sniff_codec(data))
+
+    def _wire_codec(self) -> Codec:
+        return self._peer_codec or self._codec
+
     def pull(self, timeout_s: float) -> Optional[dict]:
         raise NotImplementedError
 
@@ -145,13 +165,24 @@ class ClientTransport:
 
 
 class ZmqHostTransport(HostTransport):
-    """Host: one PUSH socket per client + one bound PULL for results."""
+    """Host: one PUSH socket per client + one bound PULL for results.
 
-    def __init__(self, result_bind: str, client_endpoints: Dict[int, str]):
+    ``zmq.Context.instance()`` is process-global, so by default close() only
+    closes this transport's sockets and leaves the shared context alone;
+    pass ``own_ctx=True`` for a private context that close() terminates.
+    close() is idempotent and linger-free either way.
+    """
+
+    def __init__(self, result_bind: str, client_endpoints: Dict[int, str],
+                 codec: Union[str, Codec] = "json", own_ctx: bool = False):
         import zmq
 
-        self._ctx = zmq.Context.instance()
+        self._codec = resolve_codec(codec)
+        self._own_ctx = own_ctx
+        self._ctx = zmq.Context() if own_ctx else zmq.Context.instance()
+        self._closed = False
         self._pull = self._ctx.socket(zmq.PULL)
+        self._pull.setsockopt(zmq.LINGER, 0)
         self._pull.bind(result_bind)
         self._push = {}
         for cid, ep in client_endpoints.items():
@@ -161,32 +192,46 @@ class ZmqHostTransport(HostTransport):
             self._push[cid] = s
 
     def push(self, client_id: int, msg: dict) -> None:
-        self._push[client_id].send_json(msg)
+        self._push[client_id].send(self._codec.encode(msg))
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         import zmq
 
         if self._pull.poll(int(timeout_s * 1000), zmq.POLLIN):
-            return self._pull.recv_json()
+            return decode_wire(self._pull.recv())
         return None
 
     def client_ids(self) -> List[int]:
         return sorted(self._push)
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         for s in self._push.values():
             s.close(0)
         self._pull.close(0)
+        if self._own_ctx:
+            self._ctx.term()
 
 
 class ZmqClientTransport(ClientTransport):
-    """Client: bound PULL for configs + PUSH connected to the host."""
+    """Client: bound PULL for configs + PUSH connected to the host.
 
-    def __init__(self, config_bind: str, result_endpoint: str):
+    Same context/teardown policy as ``ZmqHostTransport``.
+    """
+
+    def __init__(self, config_bind: str, result_endpoint: str,
+                 codec: Union[str, Codec] = "json", own_ctx: bool = False):
         import zmq
 
-        self._ctx = zmq.Context.instance()
+        self._codec = resolve_codec(codec)
+        self._peer_codec = None
+        self._own_ctx = own_ctx
+        self._ctx = zmq.Context() if own_ctx else zmq.Context.instance()
+        self._closed = False
         self._pull = self._ctx.socket(zmq.PULL)
+        self._pull.setsockopt(zmq.LINGER, 0)
         self._pull.bind(config_bind)
         self._push = self._ctx.socket(zmq.PUSH)
         self._push.setsockopt(zmq.LINGER, 0)
@@ -196,15 +241,22 @@ class ZmqClientTransport(ClientTransport):
         import zmq
 
         if self._pull.poll(int(timeout_s * 1000), zmq.POLLIN):
-            return self._pull.recv_json()
+            data = self._pull.recv()
+            self._note_wire(data)
+            return decode_wire(data)
         return None
 
     def push(self, msg: dict) -> None:
-        self._push.send_json(msg)
+        self._push.send(self._wire_codec().encode(msg))
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         self._pull.close(0)
         self._push.close(0)
+        if self._own_ctx:
+            self._ctx.term()
 
 
 # ---------------------------------------------------------------------------
@@ -215,28 +267,35 @@ class ZmqClientTransport(ClientTransport):
 class LoopbackPair:
     """Queues shared by a LoopbackHost and its LoopbackClients."""
 
-    def __init__(self, n_clients: int):
+    def __init__(self, n_clients: int, codec: Union[str, Codec] = "json"):
         self.to_client = {i: queue.Queue() for i in range(n_clients)}
         self.to_host: "queue.Queue" = queue.Queue()
+        self.codec = resolve_codec(codec)
 
-    def host(self) -> "LoopbackHostTransport":
-        return LoopbackHostTransport(self)
+    def host(self, codec: Union[str, Codec, None] = None
+             ) -> "LoopbackHostTransport":
+        return LoopbackHostTransport(
+            self, self.codec if codec is None else resolve_codec(codec))
 
-    def client(self, client_id: int) -> "LoopbackClientTransport":
-        return LoopbackClientTransport(self, client_id)
+    def client(self, client_id: int, codec: Union[str, Codec, None] = None
+               ) -> "LoopbackClientTransport":
+        return LoopbackClientTransport(
+            self, client_id,
+            self.codec if codec is None else resolve_codec(codec))
 
 
 class LoopbackHostTransport(HostTransport):
-    def __init__(self, pair: LoopbackPair):
+    def __init__(self, pair: LoopbackPair, codec: Optional[Codec] = None):
         self._pair = pair
+        self._codec = codec or pair.codec
 
     def push(self, client_id: int, msg: dict) -> None:
-        # round-trip through JSON to keep wire-format parity with ZMQ
-        self._pair.to_client[client_id].put(json.dumps(msg))
+        # round-trip through the codec to keep wire-format parity with ZMQ
+        self._pair.to_client[client_id].put(self._codec.encode(msg))
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         try:
-            return json.loads(self._pair.to_host.get(timeout=timeout_s))
+            return decode_wire(self._pair.to_host.get(timeout=timeout_s))
         except queue.Empty:
             return None
 
@@ -245,15 +304,20 @@ class LoopbackHostTransport(HostTransport):
 
 
 class LoopbackClientTransport(ClientTransport):
-    def __init__(self, pair: LoopbackPair, client_id: int):
+    def __init__(self, pair: LoopbackPair, client_id: int,
+                 codec: Optional[Codec] = None):
         self._pair = pair
         self._cid = client_id
+        self._codec = codec or pair.codec
+        self._peer_codec = None
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         try:
-            return json.loads(self._pair.to_client[self._cid].get(timeout=timeout_s))
+            data = self._pair.to_client[self._cid].get(timeout=timeout_s)
         except queue.Empty:
             return None
+        self._note_wire(data)
+        return decode_wire(data)
 
     def push(self, msg: dict) -> None:
-        self._pair.to_host.put(json.dumps(msg))
+        self._pair.to_host.put(self._wire_codec().encode(msg))

@@ -42,6 +42,18 @@ def parse_args():
     p.add_argument("--batch-size", type=int, default=None,
                    help="configs per dispatched chunk (batched fast path); "
                         "default: scalar one-config-per-message dispatch")
+    p.add_argument("--dispatch", default="eager",
+                   choices=["eager", "pipelined"],
+                   help="eager: a client gets its next chunk only after "
+                        "answering its current one; pipelined: keep every "
+                        "client's queue 2 chunks deep (double-buffering)")
+    p.add_argument("--chunk-budget-ms", type=float, default=None,
+                   help="adaptive chunk sizing: target this wall-time budget "
+                        "per chunk from an EWMA of observed per-config wall "
+                        "time per client (replaces the static --batch-size)")
+    p.add_argument("--codec", default="json", choices=["json", "binary"],
+                   help="wire codec: binary packs columnar frames' numeric "
+                        "columns as typed arrays (fleet-friendly)")
     return p.parse_args()
 
 
@@ -125,7 +137,7 @@ def main():
     print(f"[explore] space size = {space.size()} "
           f"({len(space.knobs)} knobs); workload={args.workload}/{args.shape}")
 
-    pair = transport.LoopbackPair(args.clients)
+    pair = transport.LoopbackPair(args.clients, codec=args.codec)
     build_fn = make_build_fn(args, jc)
     clients = [JClient(jc, build_fn, transport=pair.client(i), client_id=i)
                for i in range(args.clients)]
@@ -136,13 +148,17 @@ def main():
     for t in threads:
         t.start()
 
-    store = ResultStore(csv_path=args.out)
+    # pre-seed the CSV schema so a leading timeout/failure can't narrow it
+    store = ResultStore(csv_path=args.out,
+                        knob_names=[k.name for k in space],
+                        metric_names=("time_s", "power_w"))
     host = JHost(pair.host(), store, timeout_s=args.timeout, poll_s=0.05)
     algo = ALGORITHMS[args.algorithm](space, seed=args.seed)
     t0 = time.time()
     host.explore(algo, args.workload, args.shape, args.samples,
                  objectives=("time_s", "power_w"), progress=True,
-                 batch_size=args.batch_size)
+                 batch_size=args.batch_size, dispatch=args.dispatch,
+                 chunk_budget_ms=args.chunk_budget_ms)
     host.stop_clients()
     dt = time.time() - t0
 

@@ -256,6 +256,43 @@ def test_batch_mode_matches_scalar_metrics(jc):
             assert batched[cid].metrics[k] == v, k
 
 
+def test_pipelined_dispatch_explores_all_and_matches_eager(jc):
+    """Double-buffered dispatch + adaptive chunk sizing + binary codec:
+    every config completes, metrics identical to the eager barrier path."""
+    build = sw_dependent_build(jc)
+
+    def explore(dispatch, codec, budget):
+        pair = transport.LoopbackPair(2, codec=codec)
+        _serve_clients(pair, jc, build, range(2))
+        host = JHost(pair.host(), ResultStore(), timeout_s=30.0, poll_s=0.01)
+        store = host.explore(RandomSearch(jc.space, seed=0), "a", "s", 40,
+                             batch_size=8, dispatch=dispatch,
+                             chunk_budget_ms=budget)
+        host.stop_clients()
+        return {r.config_id: r for r in store.ok_records()}
+
+    eager = explore("eager", "json", None)
+    piped = explore("pipelined", "binary", 50.0)
+    assert len(piped) == 40 and eager.keys() == piped.keys()
+    for cid in eager:
+        assert eager[cid].knobs == piped[cid].knobs
+        assert eager[cid].metrics == piped[cid].metrics
+
+
+def test_pipelined_straggler_requeued(jc):
+    """A dead client's pipelined chunks are all failed over to the healthy
+    one — the exploration still completes every config."""
+    pair = transport.LoopbackPair(2)
+    _serve_clients(pair, jc, sw_dependent_build(jc), [0])  # client 1 is dead
+    host = JHost(pair.host(), ResultStore(), timeout_s=0.1, poll_s=0.01)
+    store = host.explore(RandomSearch(jc.space, seed=0), "a", "s", 24,
+                         batch_size=4, dispatch="pipelined")
+    oks = store.ok_records()
+    assert len(oks) == 24
+    assert all(r.client_id == 0 for r in oks)
+    assert 1 in host.quarantined
+
+
 def test_batch_mode_over_zmq(jc):
     """Columnar batch frames work over the paper's ZMQ PUSH/PULL transport."""
     zmq = pytest.importorskip("zmq")

@@ -1,0 +1,240 @@
+"""Wire codec property tests: JsonCodec/BinaryCodec round-trip over row and
+columnar frames (including mixed-schema fallback columns), typed-array
+packing, sniffing decode, and codec negotiation between mismatched peers."""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _propcheck import given, settings, st
+
+from repro.core import transport
+from repro.core.codec import (BINARY_CODEC, JSON_CODEC, MAGIC, BinaryCodec,
+                              JsonCodec, decode_wire, resolve_codec,
+                              sniff_codec)
+from repro.core.transport import frame_batch, unframe_batch
+
+CODECS = (JSON_CODEC, BINARY_CODEC)
+
+
+# ---------------------------------------------------------------------------
+# random frame generators (seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _rand_scalar(rng):
+    kind = int(rng.integers(5))
+    if kind == 0:
+        return int(rng.integers(-10 ** 9, 10 ** 9))
+    if kind == 1:
+        return float(rng.standard_normal()) * 10.0 ** int(rng.integers(-3, 9))
+    if kind == 2:
+        return bool(rng.integers(2))
+    if kind == 3:
+        return f"s{int(rng.integers(1000))}"
+    return None
+
+
+def _rand_col(rng, n):
+    """A typed column: every element shares one of int/float/bool/str."""
+    kind = int(rng.integers(4))
+    if kind == 0:
+        return [int(rng.integers(-10 ** 9, 10 ** 9)) for _ in range(n)]
+    if kind == 1:
+        return [float(rng.standard_normal()) * 10.0 ** int(rng.integers(-3, 9))
+                for _ in range(n)]
+    if kind == 2:
+        return [bool(rng.integers(2)) for _ in range(n)]
+    return [f"s{int(rng.integers(1000))}" for _ in range(n)]
+
+
+def _rand_msgs(rng, uniform_schema: bool, uniform_subschema: bool):
+    """A chunk of row messages, optionally with ragged keys/sub-keys."""
+    n = int(rng.integers(1, 9))
+    keys = [f"k{j}" for j in range(int(rng.integers(1, 5)))]
+    subkeys = [f"m{j}" for j in range(int(rng.integers(1, 4)))]
+    if uniform_schema and uniform_subschema:
+        cols = {k: _rand_col(rng, n) for k in keys}
+        subcols = {s: _rand_col(rng, n) for s in subkeys}
+        return [{"config_id": i, **{k: cols[k][i] for k in keys},
+                 "metrics": {s: subcols[s][i] for s in subkeys}}
+                for i in range(n)]
+    msgs = []
+    for i in range(n):
+        m = {"config_id": i}
+        for k in keys:
+            if rng.random() < 0.7:
+                m[k] = _rand_scalar(rng)  # ragged: key missing in some rows
+        use = subkeys if (uniform_subschema or rng.random() < 0.5) \
+            else subkeys[:int(rng.integers(1, len(subkeys) + 1))]
+        m["metrics"] = {s: _rand_scalar(rng) for s in use}
+        msgs.append(m)
+    return msgs
+
+
+# ---------------------------------------------------------------------------
+# round-trip properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_codec_roundtrip_uniform_columnar(seed):
+    rng = np.random.default_rng(seed)
+    msgs = _rand_msgs(rng, uniform_schema=True, uniform_subschema=True)
+    frame = frame_batch(msgs)
+    for codec in CODECS:
+        back = decode_wire(codec.encode(frame))
+        assert back == frame, codec.name
+        assert unframe_batch(back) == msgs, codec.name
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_codec_roundtrip_mixed_schema_fallback(seed):
+    """Ragged keys force the row frame; ragged sub-keys force a per-column
+    row fallback — both must survive either codec byte-exactly."""
+    rng = np.random.default_rng(seed)
+    msgs = _rand_msgs(rng, uniform_schema=False, uniform_subschema=False)
+    frame = frame_batch(msgs)
+    for codec in CODECS:
+        back = decode_wire(codec.encode(frame))
+        assert back == frame, codec.name
+        assert unframe_batch(back) == msgs, codec.name
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_codec_roundtrip_preserves_types_exactly(seed):
+    """ints stay ints, floats round-trip bit-for-bit, bools stay bools."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 20))
+    frame = frame_batch([
+        {"config_id": i,
+         "f": float(rng.standard_normal() * 10.0 ** int(rng.integers(-300, 300))),
+         "i": int(rng.integers(-2 ** 62, 2 ** 62)),
+         "b": bool(rng.integers(2)),
+         "metrics": {"time_s": float(rng.random()), "steps": int(rng.integers(100))}}
+        for i in range(n)])
+    for codec in CODECS:
+        back = decode_wire(codec.encode(frame))
+        for col in ("f", "i", "b", "config_id"):
+            for orig, rt in zip(frame["plain"][col], back["plain"][col]):
+                assert type(rt) is type(orig), (codec.name, col)
+                if isinstance(orig, float):
+                    assert np.float64(orig).tobytes() == np.float64(rt).tobytes()
+                else:
+                    assert rt == orig
+
+
+def test_binary_packs_numeric_columns_compactly():
+    """Numeric-heavy columnar frames must actually use the binary container
+    and come out smaller than JSON."""
+    n = 512
+    rng = np.random.default_rng(0)
+    frame = frame_batch([
+        {"config_id": i, "metrics": {"time_s": float(rng.random()),
+                                     "power_w": float(rng.random() * 400)}}
+        for i in range(n)])
+    bin_wire = BINARY_CODEC.encode(frame)
+    json_wire = JSON_CODEC.encode(frame)
+    assert bin_wire[:len(MAGIC)] == MAGIC
+    assert len(bin_wire) < len(json_wire) * 0.7
+    assert decode_wire(bin_wire) == frame
+
+
+def test_binary_degenerates_to_json_when_nothing_packs():
+    msg = {"cmd": "stop"}
+    wire = BINARY_CODEC.encode(msg)
+    assert wire[:1] != MAGIC[:1]          # plain JSON bytes
+    assert json.loads(wire.decode()) == msg
+    assert decode_wire(wire) == msg
+
+
+def test_sniff_and_resolve():
+    assert sniff_codec(JSON_CODEC.encode({"a": 1})) == "json"
+    frame = frame_batch([{"x": float(i)} for i in range(4)])
+    assert sniff_codec(BINARY_CODEC.encode(frame)) == "binary"
+    assert isinstance(resolve_codec("json"), JsonCodec)
+    assert isinstance(resolve_codec("binary"), BinaryCodec)
+    assert resolve_codec(BINARY_CODEC) is BINARY_CODEC
+    with pytest.raises(ValueError):
+        resolve_codec("protobuf")
+
+
+def test_oversize_ints_fall_back_to_json_column():
+    frame = frame_batch([{"x": 2 ** 80 + i} for i in range(3)])
+    wire = BINARY_CODEC.encode(frame)
+    assert decode_wire(wire) == frame
+
+
+# ---------------------------------------------------------------------------
+# negotiation: binary host ↔ json client
+# ---------------------------------------------------------------------------
+
+
+def test_binary_host_json_client_interop_and_negotiation():
+    pair = transport.LoopbackPair(1, codec="json")
+    host = pair.host(codec="binary")
+    client = pair.client(0)               # json-configured
+    msgs = [{"config_id": i, "x": float(i)} for i in range(5)]
+    host.push_many(0, msgs)
+    assert client.pull_many(1.0) == msgs  # sniffing decode reads binary
+    client.push_many(msgs)
+    raw = pair.to_host.get(timeout=1.0)
+    # the client answers in the codec the host spoke — binary
+    assert sniff_codec(raw) == "binary"
+    assert unframe_batch(decode_wire(raw)) == msgs
+
+
+def test_json_host_binary_capable_client_stays_json():
+    pair = transport.LoopbackPair(1, codec="binary")
+    host = pair.host(codec="json")
+    client = pair.client(0)               # binary-configured
+    msgs = [{"config_id": i, "x": float(i)} for i in range(4)]
+    host.push_many(0, msgs)
+    assert client.pull_many(1.0) == msgs
+    client.push_many(msgs)
+    raw = pair.to_host.get(timeout=1.0)
+    assert sniff_codec(raw) == "json"     # negotiated down to the host's codec
+
+
+def test_zmq_close_is_idempotent():
+    zmq = pytest.importorskip("zmq")
+    rng = np.random.default_rng()
+    for attempt in range(5):    # random ports may collide on a busy runner
+        ports = [int(p) for p in rng.integers(20000, 40000, size=2)]
+        try:
+            client = transport.ZmqClientTransport(
+                f"tcp://127.0.0.1:{ports[0]}", f"tcp://127.0.0.1:{ports[1]}")
+            host = transport.ZmqHostTransport(
+                f"tcp://*:{ports[1]}", {0: f"tcp://127.0.0.1:{ports[0]}"})
+            break
+        except zmq.error.ZMQError:
+            if attempt == 4:
+                raise
+    host.push(0, {"config_id": 1})
+    assert client.pull(2.0) == {"config_id": 1}
+    for t in (host, client):
+        t.close()
+        t.close()                          # double-close must not raise
+
+
+def test_zmq_own_ctx_teardown():
+    pytest.importorskip("zmq")
+    rng = np.random.default_rng()
+    ports = [int(p) for p in rng.integers(40000, 60000, size=2)]
+    client = transport.ZmqClientTransport(
+        f"tcp://127.0.0.1:{ports[0]}", f"tcp://127.0.0.1:{ports[1]}",
+        own_ctx=True)
+    host = transport.ZmqHostTransport(
+        f"tcp://*:{ports[1]}", {0: f"tcp://127.0.0.1:{ports[0]}"},
+        own_ctx=True)
+    host.close()
+    client.close()
+    assert host._ctx.closed and client._ctx.closed
+    host.close()                           # still idempotent after term
+    client.close()

@@ -1,0 +1,89 @@
+"""ResultStore CSV schema: the header is the union of knob/metric keys, not
+whatever the first record happened to carry (a leading timeout used to freeze
+a metric-less header and silently drop every later metric)."""
+import csv
+
+from repro.core import ResultRecord, ResultStore
+
+
+def read_rows(path):
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def timeout_rec(i=0):
+    return ResultRecord(config_id=i, arch="a", shape="s",
+                        knobs={"clock": 0.5}, metrics={}, status="timeout")
+
+
+def ok_rec(i=1, **metrics):
+    metrics = metrics or {"time_s": 1.5, "power_w": 200.0}
+    return ResultRecord(config_id=i, arch="a", shape="s",
+                        knobs={"clock": 1.0}, metrics=metrics)
+
+
+def test_leading_timeout_does_not_freeze_schema(tmp_path):
+    """The original bug: first add() with empty metrics -> no metric.*
+    columns forever, extrasaction='ignore' eating every later metric."""
+    path = str(tmp_path / "r.csv")
+    store = ResultStore(csv_path=path)
+    store.add(timeout_rec(0))
+    store.add(ok_rec(1))
+    store.add(ok_rec(2))
+    store.close()
+    rows = read_rows(path)
+    assert len(rows) == 3
+    assert "metric.time_s" in rows[0] and "metric.power_w" in rows[0]
+    assert rows[0]["metric.time_s"] == ""            # timeout: blank, not lost
+    assert float(rows[1]["metric.time_s"]) == 1.5
+    assert float(rows[2]["metric.power_w"]) == 200.0
+
+
+def test_schema_widens_midstream_and_rewrites_earlier_rows(tmp_path):
+    path = str(tmp_path / "r.csv")
+    store = ResultStore(csv_path=path)
+    store.add(ok_rec(0))
+    store.add(ok_rec(1, time_s=2.0, power_w=100.0, mem_gb=12.0))
+    store.close()
+    rows = read_rows(path)
+    assert "metric.mem_gb" in rows[0]
+    assert rows[0]["metric.mem_gb"] == ""            # earlier row: blank cell
+    assert float(rows[1]["metric.mem_gb"]) == 12.0
+    assert float(rows[0]["metric.time_s"]) == 1.5    # earlier data preserved
+
+
+def test_preseeded_schema_avoids_rewrites(tmp_path):
+    path = str(tmp_path / "r.csv")
+    store = ResultStore(csv_path=path, knob_names=("clock",),
+                        metric_names=("time_s", "power_w"))
+    store.add(timeout_rec(0))
+    store.close()
+    rows = read_rows(path)
+    assert set(rows[0]) >= {"knob.clock", "metric.time_s", "metric.power_w"}
+
+
+def test_resume_append_adopts_existing_file(tmp_path):
+    path = str(tmp_path / "r.csv")
+    first = ResultStore(csv_path=path)
+    first.add(ok_rec(0))
+    first.close()
+    second = ResultStore(csv_path=path)
+    second.add(ok_rec(1, time_s=3.0, power_w=50.0, extra=7.0))
+    second.close()
+    rows = read_rows(path)
+    assert len(rows) == 2                            # first run's row kept
+    assert float(rows[0]["metric.time_s"]) == 1.5
+    assert float(rows[1]["metric.extra"]) == 7.0
+
+
+def test_to_csv_uses_union_of_all_records(tmp_path):
+    store = ResultStore()
+    store.add(timeout_rec(0))
+    store.add(ok_rec(1))
+    store.add(ok_rec(2, time_s=1.0, power_w=2.0, fits_hbm=1.0))
+    path = str(tmp_path / "out.csv")
+    store.to_csv(path)
+    rows = read_rows(path)
+    assert len(rows) == 3
+    assert {"metric.time_s", "metric.power_w", "metric.fits_hbm"} <= set(rows[0])
+    assert float(rows[2]["metric.fits_hbm"]) == 1.0

@@ -1,0 +1,301 @@
+"""DispatchScheduler unit tests: driven with a fake clock and no transports,
+threads, or sleeps — straggler expiry, retry exhaustion, pipelined
+queue-depth invariants, adaptive chunk sizing, duplicate-answer handling."""
+import pytest
+
+from repro.core import DispatchScheduler, TestConfig
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def tc(i):
+    return TestConfig(i, "a", "s", {"x": i})
+
+
+def ok(cid, client):
+    return {"config_id": cid, "status": "ok", "client_id": client,
+            "metrics": {"time_s": 1.0}, "cached": False, "wall_s": 0.0}
+
+
+def submit_n(sched, n, start=0):
+    for i in range(start, start + n):
+        sched.submit(tc(i))
+
+
+def answer_chunk(sched, client, configs):
+    for c in configs:
+        sched.on_result(ok(c.config_id, client))
+
+
+# ---------------------------------------------------------------------------
+# dispatch policies
+# ---------------------------------------------------------------------------
+
+
+def test_eager_is_depth_one():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="eager", batch_size=2, clock=clk)
+    assert s.want() == 4                       # 2 clients x 1 chunk x 2 cfgs
+    submit_n(s, 8)
+    d = s.next_dispatches()
+    # one chunk per client, never a second while the first is unanswered
+    assert [(c, len(cfgs)) for c, cfgs in d] == [(0, 2), (1, 2)]
+    assert s.next_dispatches() == []
+    assert s.want() == 0                       # pipelines full, pending holds 4
+    answer_chunk(s, 0, d[0][1])
+    d2 = s.next_dispatches()
+    assert [(c, len(cfgs)) for c, cfgs in d2] == [(0, 2)]
+
+
+def test_scalar_mode_is_chunk_of_one():
+    s = DispatchScheduler([0], policy="eager", batch_size=None,
+                          clock=FakeClock())
+    submit_n(s, 3)
+    d = s.next_dispatches()
+    assert [(c, len(cfgs)) for c, cfgs in d] == [(0, 1)]
+
+
+def test_pipelined_keeps_two_chunks_deep():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="pipelined", batch_size=3, clock=clk)
+    assert s.want() == 6                       # depth 2 x 3 configs
+    submit_n(s, 12)
+    d = s.next_dispatches()
+    assert [(c, len(cfgs)) for c, cfgs in d] == [(0, 3), (0, 3)]
+    assert s.next_dispatches() == []           # invariant: never deeper than 2
+    # completing the head chunk immediately tops the queue back up to 2
+    answer_chunk(s, 0, d[0][1])
+    d2 = s.next_dispatches()
+    assert [(c, len(cfgs)) for c, cfgs in d2] == [(0, 3)]
+    assert len(s.slots[0].chunks) == 2
+
+
+def test_pipelined_depth_invariant_over_many_rounds():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="pipelined", batch_size=2, clock=clk)
+    submit_n(s, 40)
+    outstanding = {0: [], 1: []}
+    done = 0
+    while done < 40:
+        for client, cfgs in s.next_dispatches():
+            outstanding[client].append(cfgs)
+            assert len(s.slots[client].chunks) <= 2
+        for client in (0, 1):
+            if outstanding[client]:
+                clk.advance(0.5)
+                answer_chunk(s, client, outstanding[client].pop(0))
+                done += 2
+    assert s.n_configs_dispatched == 40
+    assert not s.chunks and not s.inflight and not s.pending
+
+
+# ---------------------------------------------------------------------------
+# straggler expiry / retries
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_expiry_requeues_with_one_less_retry():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="eager", batch_size=2,
+                          timeout_s=10.0, max_retries=2, clock=clk)
+    submit_n(s, 4)
+    s.next_dispatches()
+    answer_chunk(s, 1, [tc(2), tc(3)])         # client 1 answers, 0 stalls
+    clk.advance(25.0)                          # past the 2-config deadline (20)
+    assert s.expire() == []                    # retries left: nothing terminal
+    assert 0 in s.quarantined and s.slots[0].quarantined
+    assert [r for _, r in s.pending] == [1, 1]  # retries decremented from 2
+    # survivors fail over to the healthy client only
+    d = s.next_dispatches()
+    assert [c for c, _ in d] == [1]
+
+
+def test_retry_exhaustion_is_terminal_timeout():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="eager", batch_size=1,
+                          timeout_s=5.0, max_retries=0, clock=clk)
+    submit_n(s, 1)
+    s.next_dispatches()
+    clk.advance(6.0)
+    dead = s.expire()
+    assert [(t.config_id, c) for t, c in dead] == [(0, 0)]
+    assert s.stuck()                           # sole client quarantined
+
+
+def test_pipelined_expiry_fails_over_all_queued_chunks():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="pipelined", batch_size=2,
+                          timeout_s=10.0, max_retries=1, clock=clk)
+    submit_n(s, 8)
+    d = s.next_dispatches()
+    chunks0 = [cfgs for c, cfgs in d if c == 0]
+    chunks1 = [cfgs for c, cfgs in d if c == 1]
+    assert len(chunks0) == 2                   # two chunks queued on each
+    answer_chunk(s, 1, chunks1[0])             # client 1 is alive and working
+    clk.advance(21.0)                          # client 0's head deadline = 20
+    s.expire()
+    assert 0 in s.quarantined
+    # BOTH of client 0's chunks were failed over, not just the expired head
+    assert len(s.pending) == 4
+    assert not s.slots[0].chunks
+    # client 1's remaining chunk has stacked headroom (deadline 40): survives
+    assert 1 not in s.quarantined
+
+
+def test_queued_chunk_deadline_stacks_behind_predecessor():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="pipelined", batch_size=2,
+                          timeout_s=10.0, clock=clk)
+    submit_n(s, 4)
+    s.next_dispatches()
+    head, queued = [s.chunks[c] for c in s.slots[0].chunks]
+    assert head.deadline == pytest.approx(20.0)
+    assert queued.deadline == pytest.approx(40.0)  # its clock starts at 20
+    assert queued.started_at is None
+
+
+def test_late_straggler_answer_records_but_does_not_free_owner():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="eager", batch_size=1,
+                          timeout_s=5.0, max_retries=2, clock=clk)
+    submit_n(s, 2)
+    s.next_dispatches()                        # cfg0 -> client0, cfg1 -> client1
+    clk.advance(1.0)
+    s.on_result(ok(1, 1))                      # client1 answers in time
+    clk.advance(5.0)
+    s.expire()                                 # client0 quarantined, cfg0 requeued
+    d = s.next_dispatches()
+    assert [(c, cfgs[0].config_id) for c, cfgs in d] == [(1, 0)]
+    # the quarantined straggler answers cfg0 first: result is recorded...
+    assert s.on_result(ok(0, 0)) is not None
+    # ...but client1 still owes its chunk: no new dispatch until it answers
+    submit_n(s, 1, start=2)
+    assert s.next_dispatches() == []
+    assert s.on_result(ok(0, 1)) is None       # duplicate: bookkeeping only
+    assert [(c, cfgs[0].config_id)
+            for c, cfgs in s.next_dispatches()] == [(1, 2)]
+
+
+def test_duplicate_result_returns_none():
+    s = DispatchScheduler([0], batch_size=1, clock=FakeClock())
+    submit_n(s, 1)
+    s.next_dispatches()
+    assert s.on_result(ok(0, 0)).config_id == 0
+    assert s.on_result(ok(0, 0)) is None
+
+
+# ---------------------------------------------------------------------------
+# adaptive chunk sizing
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_chunk_targets_budget():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="eager", batch_size=4,
+                          chunk_budget_s=1.0, clock=clk)
+    submit_n(s, 100)
+    d = s.next_dispatches()
+    assert len(d[0][1]) == 4                   # no EWMA yet: batch_size seeds
+    clk.advance(0.4)                           # 0.1 s per config observed
+    answer_chunk(s, 0, d[0][1])
+    assert s.slots[0].ewma_per_cfg_s == pytest.approx(0.1)
+    d2 = s.next_dispatches()
+    assert len(d2[0][1]) == 10                 # 1.0 s budget / 0.1 s per cfg
+
+
+def test_adaptive_chunk_shrinks_for_slow_client_and_clamps():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="eager", batch_size=8,
+                          chunk_budget_s=1.0, min_chunk=2, max_chunk=16,
+                          ewma_alpha=1.0, clock=clk)
+    submit_n(s, 200)
+    d = s.next_dispatches()
+    clk.advance(8.0)                           # brutally slow: 1 s per config
+    answer_chunk(s, 0, d[0][1])
+    d2 = s.next_dispatches()
+    assert len(d2[0][1]) == 2                  # clamped at min_chunk
+    clk.advance(0.0001)                        # now absurdly fast
+    answer_chunk(s, 0, d2[0][1])
+    assert len(s.next_dispatches()[0][1]) == 16    # clamped at max_chunk
+
+
+def test_adaptive_per_client_sizing_is_independent():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], policy="pipelined", batch_size=4,
+                          chunk_budget_s=1.0, ewma_alpha=1.0, clock=clk)
+    submit_n(s, 400)
+    d = s.next_dispatches()
+    fast = [cfgs for c, cfgs in d if c == 0][0]
+    slow = [cfgs for c, cfgs in d if c == 1][0]
+    clk.advance(0.2)                           # 0.05 s/cfg on client 0
+    answer_chunk(s, 0, fast)
+    clk.advance(1.8)                           # 0.5 s/cfg on client 1
+    answer_chunk(s, 1, slow)
+    sizes = {c: len(cfgs) for c, cfgs in s.next_dispatches()}
+    assert sizes[0] > sizes[1]                 # fast client gets bigger chunks
+    assert sizes[1] == 2                       # 1.0 / 0.5
+
+
+def test_coalesced_chunk_folds_into_predecessor_ewma():
+    """When the client coalesces both queued chunks into one evaluate_batch,
+    their results land in one frame: the successor completes with ~zero
+    measured duration.  The EWMA must reflect span/(both chunks' configs),
+    not an inflated predecessor sample plus a bogus near-zero sample."""
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="pipelined", batch_size=4,
+                          chunk_budget_s=1.0, ewma_alpha=1.0, clock=clk)
+    submit_n(s, 20)
+    d = s.next_dispatches()                    # two 4-config chunks queued
+    clk.advance(0.8)                           # client evaluates BOTH: 0.1 s/cfg
+    s.note_results()                           # one coalesced result frame
+    for _, cfgs in d:
+        answer_chunk(s, 0, cfgs)
+    assert s.slots[0].ewma_per_cfg_s == pytest.approx(0.8 / 8)
+    # the next chunk is sized from the true rate: 1.0 s budget / 0.1 s per cfg
+    assert len(s.next_dispatches()[0][1]) == 10
+
+
+def test_separate_result_frames_are_independent_observations():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="pipelined", batch_size=4,
+                          chunk_budget_s=1.0, ewma_alpha=1.0, clock=clk)
+    submit_n(s, 20)
+    d = s.next_dispatches()
+    clk.advance(0.4)
+    s.note_results()
+    answer_chunk(s, 0, d[0][1])                # chunk 1 alone: 0.1 s/cfg
+    clk.advance(0.8)
+    s.note_results()
+    answer_chunk(s, 0, d[1][1])                # chunk 2 alone: 0.2 s/cfg
+    assert s.slots[0].ewma_per_cfg_s == pytest.approx(0.2)
+
+
+def test_want_accounts_for_pending_backlog():
+    s = DispatchScheduler([0], policy="pipelined", batch_size=5,
+                          clock=FakeClock())
+    assert s.want() == 10
+    submit_n(s, 7)
+    assert s.want() == 3
+    s.next_dispatches()
+    assert s.want() == 0                       # both chunk slots occupied
+
+
+def test_stuck_only_when_everyone_quarantined():
+    clk = FakeClock()
+    s = DispatchScheduler([0, 1], batch_size=1, timeout_s=1.0,
+                          max_retries=0, clock=clk)
+    assert not s.stuck()                       # idle but healthy
+    submit_n(s, 2)
+    s.next_dispatches()
+    clk.advance(2.0)
+    dead = s.expire()
+    assert len(dead) == 2 and s.stuck()
