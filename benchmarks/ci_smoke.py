@@ -24,26 +24,41 @@ The baseline is recorded with the identical interleaved statistic:
 ``benchmarks/smoke_baseline.json`` (explicit opt-in; ``results/`` is
 gitignored, so CI checkouts only see the benchmarks/ file).
 
+A second row gates the **searchpath** (this PR's tentpole): the same
+50-config exploration driven by a live BayesOpt(EHVI) searcher, run
+async+incremental and pre-PR-inline back-to-back per rep, gated on the
+median per-pair pre-PR/async wall ratio vs
+``searchpath_prepr_vs_async_ratio`` in the same baseline file
+(recorded by ``SMOKE_RECORD=1 benchmarks.run searchpath``).
+
 Env knobs: SMOKE_SAMPLES (default 50), SMOKE_TOLERANCE (default 0.30),
-SMOKE_BASELINE (absolute evals/sec gate override).
+SMOKE_BASELINE (absolute evals/sec gate override for the evalpath row).
 """
 import json
 import os
 import sys
 
-from benchmarks.common import REPO, evalpath_workload, smoke_measure
+from benchmarks.common import (REPO, evalpath_workload,
+                               searchpath_smoke_measure, smoke_measure)
 
 N = int(os.environ.get("SMOKE_SAMPLES", "50"))
 TOLERANCE = float(os.environ.get("SMOKE_TOLERANCE", "0.30"))
 BASELINE_PATH = os.path.join(REPO, "benchmarks", "smoke_baseline.json")
 
 
-def main() -> int:
+def _load_baseline() -> dict:
+    try:
+        with open(BASELINE_PATH) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def evalpath_gate(space, jc, build, baseline) -> int:
     import numpy as np
 
     from repro.core import TestConfig
 
-    space, jc, build = evalpath_workload()
     rng = np.random.default_rng(0)
     tcs = [TestConfig(i, "toy", "generate", space.sample(rng))
            for i in range(N)]
@@ -66,13 +81,11 @@ def main() -> int:
         return 0 if eps >= floor else 1
 
     try:
-        with open(BASELINE_PATH) as f:
-            baseline = json.load(f)
         base_ratio = float(baseline["pipelined_vs_eager_ratio"])
         base_eps = float(baseline["pipelined_smoke_evals_per_s"])
-    except (OSError, KeyError, ValueError, json.JSONDecodeError):
-        print("smoke: no checked-in baseline — passing (SMOKE_RECORD=1 "
-              "benchmarks.run evalpath records one)")
+    except (KeyError, ValueError):
+        print("smoke: no checked-in evalpath baseline — passing "
+              "(SMOKE_RECORD=1 benchmarks.run evalpath records one)")
         return 0
 
     print(f"smoke: absolute {eps:.0f} vs {base_eps:.0f} baseline evals/s "
@@ -83,6 +96,44 @@ def main() -> int:
           f"(baseline ratio {base_ratio:.2f}, tolerance {TOLERANCE:.0%}) "
           f"-> {verdict}")
     return 0 if ratio >= floor else 1
+
+
+def searchpath_gate(space, jc, build, baseline) -> int:
+    wall_a, wall_p, ratio, store = searchpath_smoke_measure(
+        N, space, jc, build)
+    bad = [r.config_id for r in store.records if r.status != "ok"]
+    if len(store.records) != N or bad:
+        print(f"SMOKE FAIL (searchpath): {len(store.records)}/{N} configs, "
+              f"non-ok: {bad[:5]}")
+        return 1
+    eps = N / wall_a
+    print(f"smoke: {eps:.0f} async-searchpath evals/s over {N} configs "
+          f"({N / wall_p:.0f} pre-PR inline; pre-PR/async ratio {ratio:.2f})")
+
+    try:
+        base_ratio = float(baseline["searchpath_prepr_vs_async_ratio"])
+        base_eps = float(baseline["searchpath_async_smoke_evals_per_s"])
+    except (KeyError, ValueError):
+        print("smoke: no checked-in searchpath baseline — passing "
+              "(SMOKE_RECORD=1 benchmarks.run searchpath records one)")
+        return 0
+
+    print(f"smoke: searchpath absolute {eps:.0f} vs {base_eps:.0f} baseline "
+          f"evals/s ({eps / base_eps:.2f}x; informational)")
+    floor = base_ratio * (1.0 - TOLERANCE)
+    verdict = "ok" if ratio >= floor else "REGRESSION"
+    print(f"smoke: searchpath ratio gate {ratio:.2f} vs floor {floor:.2f} "
+          f"(baseline ratio {base_ratio:.2f}, tolerance {TOLERANCE:.0%}) "
+          f"-> {verdict}")
+    return 0 if ratio >= floor else 1
+
+
+def main() -> int:
+    space, jc, build = evalpath_workload()
+    baseline = _load_baseline()
+    rc = evalpath_gate(space, jc, build, baseline)
+    rc_search = searchpath_gate(space, jc, build, baseline)
+    return rc or rc_search
 
 
 if __name__ == "__main__":

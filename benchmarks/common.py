@@ -1,4 +1,41 @@
-"""Shared benchmark plumbing: explore a workload in-process, return the store."""
+"""Shared benchmark plumbing: explore a workload in-process, return the store.
+
+results/bench.json row schema (the benchmarks/ README stanza)
+--------------------------------------------------------------
+``benchmarks.run`` writes ``results/bench.json`` as
+``{"n_samples": N, "benches": {<name>: {<key>: value, ...}, ...}}``.
+Every bench row carries ``us_per_call`` (mean wall per evaluation) and
+``derived`` (the bench's headline number).  Named sub-metrics:
+
+* ``evalpath`` rows (PR 1/2): ``scalar/batched/eager/pipelined_evals_per_s``,
+  ``pipelined_vs_eager``, ``jitter_speedup``,
+  ``pipelined_smoke_evals_per_s``.
+* ``searchpath`` rows (this PR — BayesOpt-EHVI in the loop, 2 clients):
+  - ``searchpath_prepr_evals_per_s``   — the vendored pre-PR ask wholesale
+    (string-key pool loop, naive kernel, loop mask, O(n³) refit per ask),
+    run inline: the speedup baseline;
+  - ``searchpath_refit_evals_per_s``   — this PR's vectorized ask but
+    still refitting per ask (isolates the incremental-factor gain);
+  - ``searchpath_sync_evals_per_s``    — inline ask, incremental O(n²)
+    rank-append GP (factor cached across asks);
+  - ``searchpath_async_evals_per_s``   — incremental GP **and** the ask
+    precomputed in a SearchDriver worker, overlapped with evaluation;
+  - ``searchpath_speedup``             — pre-PR wall / async wall (the
+    PR's ≥3× acceptance number);
+  - ``searchpath_overlap_speedup``     — sync wall / async wall on a
+    4-8 ms/message latency fleet (what precompute alone buys once the
+    wire/eval side is nontrivial);
+  - ``searchpath_sync_picks_identical``— 1.0 when a deterministic ask/tell
+    replay through SearchDriver(sync) picks bit-identically to the bare
+    algorithm;
+  - ``searchpath_ask_ms_{refit,incremental}_n<k>`` — amortized per-new-
+    observation (tell+ask) cost in ms at k observations;
+  - ``searchpath_ask_growth_{refit,incremental}`` — cost ratio between the
+    two largest checkpoints (≈2³ for O(n³) refit vs ≈flat for the
+    incremental path: the curve flattening the ISSUE asks to measure);
+  - ``searchpath_smoke_ratio``         — median per-pair pre-PR/async wall
+    ratio at smoke size (the CI gate statistic, see ci_smoke.py).
+"""
 from __future__ import annotations
 
 import os
@@ -327,6 +364,232 @@ def run_hostpath(tcs, jc, build, *, clients: int = 1, dispatch: str = "eager",
         if best is None or wall < best[0]:
             best = (wall, recs)
     return best
+
+
+def _make_prepr_bayesopt(space, seed, n_init, pool_size):
+    """The pre-PR BayesOpt(EHVI) ask path, vendored as the bench baseline.
+
+    ``bench_searchpath``'s speedup is quoted against "the pre-PR
+    inline/refit path"; the live class no longer contains it (the pool is
+    vectorized, the mask broadcast, the factor incremental), so the seed's
+    ask is reproduced here verbatim: config-at-a-time pool building with
+    sorted-string keys, a fresh O(n³) GP refactor per ask, one naive-kernel
+    fit/predict per objective, and the Python-loop nondominated mask in the
+    EHVI front.  Tells run inline in the host loop, like they did.
+    """
+    import numpy as np
+
+    from repro.core.search.bayesopt import GP, BayesOpt, ehvi_improvements
+    from repro.core.results import _nondominated_mask_loop
+    import repro.core.search.bayesopt as bayesopt_mod
+
+    class _PrePRBayesOpt(BayesOpt):
+        def __init__(self):
+            super().__init__(space, seed=seed, n_init=n_init,
+                             pool_size=pool_size, strategy="ehvi",
+                             gp_mode="refit")
+            self._seen_keys = set()
+
+        def _pool(self):
+            pool, keys = [], set()
+            while len(pool) < self.pool_size:
+                c = self.space.sample(self.rng)
+                k = self._key(c)
+                if k in keys or k in self._seen_keys:
+                    continue
+                keys.add(k)
+                pool.append(c)
+            return pool
+
+        def ask(self, n):
+            out = []
+            ys = self.observed_values()
+            if len(self.history_x) < self.n_init:
+                while len(out) < n:
+                    c = self.space.sample(self.rng)
+                    if self._key(c) not in self._seen_keys:
+                        self._seen_keys.add(self._key(c))
+                        out.append(c)
+                return out
+            xs = self.observed_points()
+            pool = self._pool()
+            xp = np.stack([self.space.encode(c) for c in pool])
+            gp = GP().fit_x(xs)
+            mus = np.stack([gp.fit_y(ys[:, j]).predict(xp)[0]
+                            for j in range(ys.shape[1])], axis=1)
+            ref = ys.max(0) * 1.1 + 1e-9
+            # the seed's ehvi sweep ran over the loop nondominated mask
+            orig = bayesopt_mod.nondominated_mask
+            bayesopt_mod.nondominated_mask = _nondominated_mask_loop
+            try:
+                score = ehvi_improvements(ys, ref, mus)
+            finally:
+                bayesopt_mod.nondominated_mask = orig
+            for i in np.argsort(-score):
+                if len(out) >= n:
+                    break
+                if self._key(pool[i]) not in self._seen_keys:
+                    self._seen_keys.add(self._key(pool[i]))
+                    out.append(pool[i])
+            while len(out) < n:
+                out.append(self.space.sample(self.rng))
+            return out
+
+    return _PrePRBayesOpt()
+
+
+def run_searchpath(n_samples, space, jc, build, *, driver_mode=None,
+                   gp_mode="incremental", seed=0, clients=1, batch_size=10,
+                   pool_size=256, n_init=12, reps=1, timeout_s=120.0,
+                   latency_s=0.0, jitter_s=0.0):
+    """BayesOpt(EHVI)-in-the-loop exploration over loopback.
+
+    Unlike ``run_hostpath`` (fixed search, measures the dispatch side), the
+    searcher here is live model-based search — the hot side this bench
+    exercises.  ``driver_mode=None`` runs the bare algorithm inline (the
+    pre-SearchDriver host path); ``"sync"``/``"async"`` wrap it in a
+    SearchDriver.  ``gp_mode`` picks the surrogate update: ``"refit"`` is
+    the per-ask O(n³) refactor, ``"incremental"`` the O(n²) rank-append
+    path, and ``"prepr"`` the vendored pre-PR ask wholesale (string-key
+    pool loop + naive kernel + loop mask + per-ask refit — the speedup
+    baseline).  Returns (best_wall_s, store, driver_stats | None).
+    """
+    import threading
+    import time as _time
+
+    from repro.core import (BayesOpt, JClient, JHost, ResultStore,
+                            SearchDriver, transport)
+
+    best = None
+    for _ in range(reps):
+        pair = transport.LoopbackPair(clients)
+        for i in range(clients):
+            ct = pair.client(i)
+            if latency_s or jitter_s:
+                ct = _LatencyClientTransport(ct, latency_s * (1 + 0.5 * i),
+                                             jitter_s, seed=100 + i)
+            cl = JClient(jc, build, transport=ct, client_id=i,
+                         cache_size=256)
+            threading.Thread(target=cl.serve, kwargs=dict(poll_s=0.005),
+                             daemon=True).start()
+        ht = pair.host()
+        if latency_s or jitter_s:
+            ht = _LatencyHostTransport(ht, latency_s, jitter_s, seed=7)
+        host = JHost(ht, ResultStore(), timeout_s=timeout_s,
+                     poll_s=0.002)
+        if gp_mode == "prepr":
+            algo = _make_prepr_bayesopt(space, seed, n_init, pool_size)
+        else:
+            algo = BayesOpt(space, seed=seed, n_init=n_init,
+                            pool_size=pool_size, strategy="ehvi",
+                            gp_mode=gp_mode)
+        search = (SearchDriver(algo, mode=driver_mode)
+                  if driver_mode is not None else algo)
+        t0 = _time.perf_counter()
+        try:
+            store = host.explore(search, "toy", "generate", n_samples,
+                                 batch_size=batch_size, dispatch="pipelined")
+            # wall is exploration time only: the driver may still be mid-way
+            # through a speculative ask that close() would wait out
+            wall = _time.perf_counter() - t0
+        finally:
+            dstats = search.stats() if search is not algo else None
+            if search is not algo:
+                search.close()
+        host.stop_clients()
+        if best is None or wall < best[0]:
+            best = (wall, store, dstats)
+    return best
+
+
+def ask_cost_curve(gp_mode, checkpoints=(50, 100, 200), pool_size=512,
+                   seed=0, timed_iters=3):
+    """Amortized (tell+ask) cost per new observation vs observation count.
+
+    Feeds a BayesOpt(EHVI) searcher synthetic observations up to each
+    checkpoint, then times a few tell+ask cycles there.  Run over the big
+    training space so the pool never nears exhaustion.  Returns
+    {n_observations: ms_per_cycle}.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core import BayesOpt, tpu_pod_space
+
+    space = tpu_pod_space(n_chips=256)
+    algo = BayesOpt(space, seed=seed, n_init=8, pool_size=pool_size,
+                    strategy="ehvi", gp_mode=gp_mode)
+    rng = np.random.default_rng(seed)
+    out = {}
+    n = 0
+    for ck in checkpoints:
+        while n < ck:
+            for c in algo.ask(1):
+                algo.tell(c, rng.random(2) + 0.5)
+                n += 1
+        t0 = _time.perf_counter()
+        for _ in range(timed_iters):
+            c = algo.ask(1)[0]
+            algo.tell(c, rng.random(2) + 0.5)
+            n += 1
+        out[ck] = (_time.perf_counter() - t0) / timed_iters * 1e3
+    return out
+
+
+def sync_picks_identical(space, n=120, chunk=10, seed=0):
+    """Deterministic ask/tell replay: bare algorithm vs SearchDriver(sync).
+
+    Drives both through the identical ask(chunk)/tell sequence (no host
+    loop, no threads, so no timing-dependent want() sizes) and checks every
+    pick matches bit-for-bit — the acceptance criterion for the sync
+    pass-through.
+    """
+    import numpy as np
+
+    from repro.core import BayesOpt, SearchDriver
+
+    def mk():
+        return BayesOpt(space, seed=seed, n_init=12, pool_size=256,
+                        strategy="ehvi", gp_mode="incremental")
+
+    def obj(c):
+        x = space.encode(c)
+        return np.array([1.0 + x.sum(), 2.0 - x[0] + 0.3 * x[1]])
+
+    bare, drv = mk(), SearchDriver(mk(), mode="sync")
+    for _ in range(max(n // chunk, 1)):
+        a, b = bare.ask(chunk), drv.ask(chunk)
+        if a != b:
+            return False
+        for c in a:
+            y = obj(c)
+            bare.tell(c, y)
+            drv.tell(c, y)
+    return True
+
+
+def searchpath_smoke_measure(n, space, jc, build, reps=7):
+    """Interleaved pre-PR-inline vs async-incremental searchpath pairs.
+
+    Same rationale as ``smoke_measure``: a smoke-sized exploration is ms of
+    wall, so the per-pair back-to-back wall ratio (pre-PR/async) is the
+    noise-cancelling statistic the CI gate tracks across machines.  Returns
+    (median_async_wall_s, median_prepr_wall_s, median_pair_ratio,
+    async_store).
+    """
+    awalls, pwalls, ratios = [], [], []
+    store = None
+    for _ in range(reps):
+        wa, store, _ = run_searchpath(n, space, jc, build,
+                                      driver_mode="async",
+                                      gp_mode="incremental", reps=1)
+        wp, _, _ = run_searchpath(n, space, jc, build, driver_mode=None,
+                                  gp_mode="prepr", reps=1)
+        awalls.append(wa)
+        pwalls.append(wp)
+        ratios.append(wp / wa)
+    return _median(awalls), _median(pwalls), _median(ratios), store
 
 
 def _median(xs):

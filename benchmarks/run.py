@@ -15,9 +15,11 @@ import os
 import sys
 import time
 
-from benchmarks.common import (RESULTS, evalpath_workload, explore_generation,
-                               run_evalpath, run_hostpath, scatter_png,
-                               smoke_measure)
+from benchmarks.common import (RESULTS, ask_cost_curve, evalpath_workload,
+                               explore_generation, run_evalpath, run_hostpath,
+                               run_searchpath, scatter_png,
+                               searchpath_smoke_measure, smoke_measure,
+                               sync_picks_identical)
 
 N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "200"))
 
@@ -129,6 +131,125 @@ def bench_evalpath():
         "jitter_speedup": round(wall_je / wall_jp, 3),
         "pipelined_smoke_evals_per_s": round(len(smoke_tcs) / wall_sm, 1),
     }
+
+
+# ---------------------------------------------------------------------------
+# Search-path throughput: model-based search in the loop (this PR's tentpole)
+# ---------------------------------------------------------------------------
+
+
+def bench_searchpath():
+    """End-to-end BayesOpt(EHVI)-driven evals/sec + amortized ask cost.
+
+    Four runs of the same N-config exploration over loopback, identical
+    seed/workload: prepr = the vendored pre-PR ask wholesale (string-key
+    pool loop, naive kernel, loop mask, O(n³) refit per ask — the speedup
+    baseline), refit = this PR's vectorized ask but still refitting per ask
+    (isolates the incremental-factor gain), sync = inline asks against the
+    cached incremental O(n²) factor, async = incremental GP plus
+    SearchDriver precompute overlapped with evaluation.  A fifth sync run
+    must pick bit-identically to the bare algorithm.  The ask-cost-vs-n
+    curve shows the refit path growing ~n³ while the incremental path stays
+    flat-ish (amortized O(n²)).  derived = pre-PR wall / async wall
+    (target ≥3×).
+    """
+    space, jc, build = evalpath_workload()
+    n = N_SAMPLES
+
+    kw = dict(clients=2, reps=3)
+    wall_p, store_p, _ = run_searchpath(n, space, jc, build, driver_mode=None,
+                                        gp_mode="prepr", **kw)
+    wall_r, store_r, _ = run_searchpath(n, space, jc, build, driver_mode=None,
+                                        gp_mode="refit", **kw)
+    wall_s, store_s, _ = run_searchpath(n, space, jc, build,
+                                        driver_mode="sync",
+                                        gp_mode="incremental", **kw)
+    wall_a, store_a, dstats = run_searchpath(n, space, jc, build,
+                                             driver_mode="async",
+                                             gp_mode="incremental", **kw)
+
+    # fleet with 4-8 ms/message latency: here the ask precompute genuinely
+    # overlaps in-flight wire+eval time, so async beats even sync-inline
+    lat = dict(latency_s=0.004, jitter_s=0.004, clients=2, reps=3)
+    wall_ls, _, _ = run_searchpath(n, space, jc, build, driver_mode="sync",
+                                   gp_mode="incremental", **lat)
+    wall_la, _, _ = run_searchpath(n, space, jc, build, driver_mode="async",
+                                   gp_mode="incremental", **lat)
+
+    # sync-mode SearchDriver must pick bit-identically to the bare algorithm
+    # (deterministic ask/tell replay — no host-loop timing in the compare)
+    identical = sync_picks_identical(space, n=min(n, 120))
+    if not identical:
+        raise RuntimeError("sync SearchDriver picks diverge from the bare "
+                           "algorithm — the pass-through is not transparent")
+
+    curve_r = ask_cost_curve("refit")
+    curve_i = ask_cost_curve("incremental")
+    cks = sorted(curve_r)
+    growth_r = curve_r[cks[-1]] / max(curve_r[cks[-2]], 1e-9)
+    growth_i = curve_i[cks[-1]] / max(curve_i[cks[-2]], 1e-9)
+
+    # smoke-sized interleaved baseline for benchmarks.ci_smoke
+    smoke_n = min(n, 50)
+    wall_sa, wall_sr, smoke_ratio, _ = searchpath_smoke_measure(
+        smoke_n, space, jc, build)
+    if os.environ.get("SMOKE_RECORD") and smoke_n == 50:
+        baseline_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                     "smoke_baseline.json")
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            baseline = {}
+        baseline.update({
+            "searchpath_prepr_vs_async_ratio": round(smoke_ratio, 3),
+            "searchpath_async_smoke_evals_per_s":
+                round(smoke_n / wall_sa, 1),
+            "searchpath_prepr_smoke_evals_per_s":
+                round(smoke_n / wall_sr, 1),
+        })
+        with open(baseline_path, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"#   searchpath smoke baseline recorded -> {baseline_path}")
+
+    speedup = wall_p / wall_a
+    print(f"# searchpath: {n}-config BayesOpt(EHVI) exploration, pipelined "
+          f"host loop, 2 clients over loopback")
+    print(f"#   pre-PR (inline, O(n^3)/ask): {n / wall_p:8.0f} evals/s "
+          f"({wall_p * 1e3:.1f} ms)")
+    print(f"#   refit (vectorized ask)     : {n / wall_r:8.0f} evals/s "
+          f"({wall_r * 1e3:.1f} ms)")
+    print(f"#   sync  (incremental GP)     : {n / wall_s:8.0f} evals/s "
+          f"({wall_s * 1e3:.1f} ms)")
+    print(f"#   async (+driver overlap)    : {n / wall_a:8.0f} evals/s "
+          f"({wall_a * 1e3:.1f} ms; driver {dstats})")
+    print(f"#   4-8 ms/msg latency fleet: sync {wall_ls * 1e3:.0f} ms, "
+          f"async {wall_la * 1e3:.0f} ms -> {wall_ls / wall_la:.2f}x "
+          f"(ask precompute hides the wire)")
+    print(f"#   amortized tell+ask ms at n={cks}: "
+          f"refit {[round(curve_r[k], 2) for k in cks]} "
+          f"(x{growth_r:.1f} last doubling), incremental "
+          f"{[round(curve_i[k], 2) for k in cks]} (x{growth_i:.1f})")
+    print(f"#   smoke ({smoke_n} cfg) pre-PR/async ratio = {smoke_ratio:.2f}")
+    print(f"#   speedup = {speedup:.2f}x (async+incremental vs pre-PR "
+          f"inline refit); sync picks identical = {identical}")
+    row = {
+        "searchpath_prepr_evals_per_s": round(n / wall_p, 1),
+        "searchpath_refit_evals_per_s": round(n / wall_r, 1),
+        "searchpath_sync_evals_per_s": round(n / wall_s, 1),
+        "searchpath_async_evals_per_s": round(n / wall_a, 1),
+        "searchpath_speedup": round(speedup, 3),
+        "searchpath_overlap_speedup": round(wall_ls / wall_la, 3),
+        "searchpath_sync_picks_identical": float(identical),
+        "searchpath_ask_growth_refit": round(growth_r, 2),
+        "searchpath_ask_growth_incremental": round(growth_i, 2),
+        "searchpath_smoke_ratio": round(smoke_ratio, 3),
+    }
+    for k in cks:
+        row[f"searchpath_ask_ms_refit_n{k}"] = round(curve_r[k], 3)
+        row[f"searchpath_ask_ms_incremental_n{k}"] = round(curve_i[k], 3)
+    return wall_a / n * 1e6, speedup, row
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +395,7 @@ def bench_roofline():
 
 BENCHES = {
     "evalpath": bench_evalpath,
+    "searchpath": bench_searchpath,
     "table1": bench_table1,
     "fig2": bench_fig2_llama,
     "fig4": bench_fig4_llava,

@@ -87,6 +87,11 @@ def main():
           f"pareto front = {len(front)} points; "
           f"{stats['chunks_dispatched']:.0f} chunks "
           f"(mean size {stats['mean_chunk']:.1f}, pipelined+binary)")
+    if "wire_per_client" in stats:        # per-board codec/bytes-on-wire
+        for cid, w in sorted(stats["wire_per_client"].items()):
+            print(f"  board {cid}: {w['out_kb']:.1f} KB out in "
+                  f"{w['out_frames']} frames, {w['in_kb']:.1f} KB back in "
+                  f"{w['in_frames']} frames ({stats.get('codec', '?')})")
     for p in procs:
         p.wait(timeout=40)
     host_t.close()

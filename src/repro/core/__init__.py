@@ -12,6 +12,6 @@ from repro.core.results import ResultRecord, ResultStore, nondominated_mask
 from repro.core.scheduler import Chunk, ClientSlot, DispatchScheduler
 from repro.core import codec, transport
 from repro.core.search import (
-    ALGORITHMS, SearchAlgorithm, RandomSearch, GridSearch, NSGA2, BayesOpt, PAL,
-    hypervolume,
+    ALGORITHMS, SearchAlgorithm, SearchDriver, RandomSearch, GridSearch,
+    NSGA2, BayesOpt, GP, IncrementalGP, PAL, hypervolume,
 )

@@ -17,7 +17,12 @@ the transport, the scheduler, and the ResultStore:
     on timeout the late client is quarantined and surviving configs are
     re-queued (up to ``max_retries`` per config), waiting in the pending
     queue if no client is free at sweep time;
-  * result saving — every result lands in a ResultStore (CSV streaming).
+  * result saving — every result lands in a ResultStore (CSV streaming);
+  * async search overlap — when ``search`` is a ``SearchDriver`` (it
+    exposes ``poll_ask``/``note_demand``), the loop feeds the scheduler's
+    backpressure (``want(lookahead=1)``) to the driver and tops the
+    pipeline up from precomputed asks without blocking on GP math; it only
+    blocks on the search when nothing is in flight (``sched.busy()``).
 
 Scalar mode (``batch_size=None``, eager) is the degenerate chunk-of-1 case
 and keeps the original one-testConfig-per-message wire format.
@@ -67,14 +72,28 @@ class JHost:
                             else chunk_budget_ms / 1e3))
         self.scheduler = sched
         self.quarantined = sched.quarantined   # shared set, stays live
+        sched.wire_stats_fn = getattr(self.transport, "wire_summary", None)
         ids = itertools.count()
         issued = completed = 0
+        # an async SearchDriver exposes poll_ask/note_demand: the host tops
+        # the pipeline up from its precomputed buffer without blocking on
+        # search math while results are in flight, and only blocks when the
+        # loop cannot otherwise progress
+        poll_ask = getattr(search, "poll_ask", None)
+        note_demand = getattr(search, "note_demand", None)
 
         while completed < n_samples:
             # top up the pending queue with fresh asks, then fill pipelines
             want = min(n_samples - issued, sched.want())
             if want > 0:
-                for knobs in search.ask(want):
+                if poll_ask is not None:
+                    if note_demand is not None:
+                        note_demand(min(n_samples - issued,
+                                        sched.want(lookahead=1)))
+                    cfgs = poll_ask(want, need=not sched.busy())
+                else:
+                    cfgs = search.ask(want)
+                for knobs in cfgs:
                     sched.submit(TestConfig(next(ids), arch, shape, knobs))
                     issued += 1
             for client, tcs in sched.next_dispatches():
@@ -99,10 +118,15 @@ class JHost:
                     search.tell(rec.knobs, y)
                 if progress and completed % 10 == 0:
                     s = sched.stats()
+                    wire = ""
+                    if "wire_out_mb" in s:
+                        wire = (f", wire {s['wire_out_mb']:.2f}/"
+                                f"{s['wire_in_mb']:.2f} MB "
+                                f"{s.get('codec', '?')}")
                     print(f"[jhost] {completed}/{n_samples} "
                           f"(inflight={s['inflight']:.0f}, "
                           f"pending={s['pending']:.0f}, "
-                          f"chunk~{s['mean_chunk']:.1f})")
+                          f"chunk~{s['mean_chunk']:.1f}{wire})")
 
             # straggler sweep: requeue survivors, record terminal timeouts
             for tc, client in sched.expire():

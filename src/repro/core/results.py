@@ -33,7 +33,25 @@ class ResultRecord:
 
 
 def nondominated_mask(points: np.ndarray) -> np.ndarray:
-    """points (N, M), minimisation.  True where no other point dominates."""
+    """points (N, M), minimisation.  True where no other point dominates.
+
+    One ``(B, N, M)`` broadcast per ≤512-row block (blocked so huge stores
+    don't allocate an N² intermediate) instead of a Python loop over rows —
+    this sits on the per-ask EHVI hot path.
+    """
+    points = np.asarray(points)
+    n = len(points)
+    mask = np.ones(n, bool)
+    for lo in range(0, n, 512):
+        blk = points[lo:lo + 512]                       # (B, M)
+        le = np.all(points[:, None, :] <= blk[None, :, :], axis=2)
+        lt = np.any(points[:, None, :] < blk[None, :, :], axis=2)
+        mask[lo:lo + 512] = ~np.any(le & lt, axis=0)
+    return mask
+
+
+def _nondominated_mask_loop(points: np.ndarray) -> np.ndarray:
+    """Reference per-row implementation (kept for equivalence tests)."""
     n = len(points)
     mask = np.ones(n, bool)
     for i in range(n):

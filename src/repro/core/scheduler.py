@@ -138,6 +138,10 @@ class DispatchScheduler:
         self._pull_seq = 0
         self.n_chunks_dispatched = 0
         self.n_configs_dispatched = 0
+        # optional wire-stats source (the host attaches its transport's
+        # ``wire_summary``); merged into stats() — the scheduler itself
+        # stays transport-free
+        self.wire_stats_fn: Optional[Callable[[], Dict]] = None
 
     # -- sizing ---------------------------------------------------------------
     def chunk_size_for(self, slot: ClientSlot) -> int:
@@ -147,11 +151,23 @@ class DispatchScheduler:
         return self.base_chunk
 
     # -- intake ---------------------------------------------------------------
-    def want(self) -> int:
-        """Fresh configs needed to fill every healthy client's pipeline."""
-        capacity = sum(s.open_chunks() * self.chunk_size_for(s)
-                       for s in self.slots.values())
+    def want(self, lookahead: int = 0) -> int:
+        """Fresh configs needed to fill every healthy client's pipeline.
+
+        ``lookahead`` adds that many extra chunks per healthy client to the
+        demand — the backpressure signal an async ``SearchDriver`` uses to
+        size its precompute buffer, so a freed slot tops up from
+        already-computed picks instead of blocking on search math.
+        """
+        capacity = sum((s.open_chunks() + lookahead) * self.chunk_size_for(s)
+                       for s in self.slots.values() if not s.quarantined)
         return max(capacity - len(self.pending), 0)
+
+    def busy(self) -> bool:
+        """Anything to wait on?  False means the host cannot make progress
+        without fresh submissions — the condition under which it should
+        block on the search instead of polling an idle transport."""
+        return bool(self.inflight) or bool(self.pending)
 
     def submit(self, tc: TestConfig) -> None:
         self.pending.append((tc, self.max_retries))
@@ -308,7 +324,7 @@ class DispatchScheduler:
 
     def stats(self) -> Dict[str, float]:
         busy = sum(1 for s in self.slots.values() if s.chunks)
-        return {
+        s = {
             "pending": len(self.pending),
             "inflight": len(self.inflight),
             "chunks": len(self.chunks),
@@ -318,3 +334,9 @@ class DispatchScheduler:
             "mean_chunk": (self.n_configs_dispatched
                            / max(self.n_chunks_dispatched, 1)),
         }
+        if self.wire_stats_fn is not None:
+            try:
+                s.update(self.wire_stats_fn() or {})
+            except Exception:
+                pass          # stats must never take the host loop down
+        return s

@@ -2,7 +2,8 @@ from repro.core.search.base import SearchAlgorithm
 from repro.core.search.random_search import RandomSearch
 from repro.core.search.grid import GridSearch
 from repro.core.search.nsga2 import NSGA2
-from repro.core.search.bayesopt import BayesOpt, PAL
+from repro.core.search.bayesopt import BayesOpt, GP, IncrementalGP, PAL
+from repro.core.search.driver import SearchDriver
 from repro.core.search.hypervolume import hypervolume, hypervolume_2d, hypervolume_3d
 
 ALGORITHMS = {

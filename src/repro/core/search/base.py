@@ -7,7 +7,7 @@ objective vector (always minimised).
 from __future__ import annotations
 
 import abc
-from typing import Dict, List
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -32,6 +32,77 @@ class SearchAlgorithm(abc.ABC):
     # -- helpers -------------------------------------------------------------
     def _key(self, knobs: Dict) -> tuple:
         return tuple(sorted((k, str(v)) for k, v in knobs.items()))
+
+    def _flat_mults(self) -> np.ndarray:
+        if not hasattr(self, "_flat_mults_cache"):
+            mults, acc = [], 1
+            for k in self.space.knobs:
+                mults.append(acc)
+                acc *= len(k.values)
+            self._flat_mults_cache = np.asarray(mults, np.int64)
+        return self._flat_mults_cache
+
+    def _flat_keys(self, idx: np.ndarray) -> np.ndarray:
+        """Mixed-radix flat index per row of an ``(n, K)`` index matrix —
+        the vectorized dedup key (one int64 dot instead of building a
+        sorted tuple of strings per config).  For spaces larger than 2⁶³
+        configs the dot wraps; a wraparound collision at worst skips a
+        candidate, it never corrupts search state."""
+        with np.errstate(over="ignore"):
+            return np.asarray(idx, np.int64) @ self._flat_mults()
+
+    def _flat_key(self, knobs: Dict) -> int:
+        return int(self._flat_keys(self.space.index_encode(knobs)[None])[0])
+
+    def _fresh_pool(self, size: int, exclude: Optional[Set[int]] = None,
+                    max_rounds: int = 50
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Candidate pool of distinct, not-yet-excluded configs, vectorized.
+
+        Replaces the config-at-a-time ``while`` loops the model-based
+        searchers used to duplicate: each round samples the whole remainder
+        as index arrays in one shot (``DesignSpace.sample_index_batch``),
+        drops in-pool duplicates (``np.unique`` on flat keys, first
+        occurrence wins so draw order is preserved) and anything in
+        ``exclude`` (the caller's already-dispatched flat keys), and tops
+        up until full.  Draws from ``self.rng`` — the one stream the scalar
+        path used.  Returns ``(idx, coords, flats)``: the ``(P, K)`` value-
+        index matrix, the encoded [0, 1] coordinate matrix, and the flat
+        dedup key per row — all arrays; callers decode to knob dicts only
+        for the handful of configs they actually pick.
+
+        A nearly-exhausted space cannot fill the pool: after ``max_rounds``
+        the partial pool is returned instead of spinning forever.
+        """
+        exclude = exclude if exclude is not None else set()
+        have: Set[int] = set()
+        picked_idx: List[np.ndarray] = []
+        n_picked = 0
+        for _ in range(max_rounds):
+            need = size - n_picked
+            if need <= 0:
+                break
+            # mild oversampling keeps the round count low once duplicates
+            # against `exclude` become common late in a run
+            idx = self.space.sample_index_batch(self.rng, need + (need >> 1) + 4)
+            flats = self._flat_keys(idx)
+            _, first = np.unique(flats, return_index=True)
+            take = []
+            for i in np.sort(first):                 # preserve draw order
+                if n_picked + len(take) >= size:
+                    break
+                f = int(flats[i])
+                if f in have or f in exclude:
+                    continue
+                have.add(f)
+                take.append(i)
+            if take:
+                picked_idx.append(idx[np.asarray(take)])
+                n_picked += len(take)
+        k = len(self.space.knobs)
+        idx = (np.vstack(picked_idx) if picked_idx
+               else np.zeros((0, k), np.int64))
+        return idx, self.space.encode_index_batch(idx), self._flat_keys(idx)
 
     def observed_points(self) -> np.ndarray:
         return (np.stack([self.space.encode(x) for x in self.history_x])

@@ -13,9 +13,20 @@ objective / scalarisation / pick within an ask (``GP.fit_y`` re-solves for
 the new targets against the cached factor).  EHVI scoring is one vectorized
 incremental-hypervolume sweep over the sorted front for the whole candidate
 pool — no per-candidate ``hypervolume_2d`` calls.
+
+Incremental GP (``gp_mode="incremental"``, the default): instead of
+refactoring K(X, X) from scratch every ask — O(n³) in observed points —
+each ``tell`` appends its row to preallocated (amortized-doubling) kernel /
+Cholesky buffers with a rank-append update, O(n²) per new observation.  The
+factor is cached across asks and invalidated only by new data, so an ask is
+pure O(n²·pool) BLAS.  ``gp_mode="refit"`` keeps the per-ask refactor (the
+pre-incremental path, retained for benchmarking and equivalence tests).
+Candidate pools come from the vectorized ``SearchAlgorithm._fresh_pool``
+(one ``sample_index_batch`` sweep, no config-at-a-time Python loop).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -23,6 +34,8 @@ import numpy as np
 from repro.core.search.base import SearchAlgorithm
 from repro.core.search.hypervolume import hypervolume_2d
 from repro.core.results import nondominated_mask
+
+GP_MODES = ("incremental", "refit")
 
 
 class GP:
@@ -72,11 +85,186 @@ class GP:
         return mu * self._ys + self._ym, np.sqrt(var) * self._ys
 
 
-def expected_improvement(mu: np.ndarray, sigma: np.ndarray, best: float) -> np.ndarray:
-    from scipy.stats import norm
+class IncrementalGP(GP):
+    """GP grown one ``tell`` at a time: rank-append Cholesky, O(n²)/update.
 
+    ``observe(x_new)`` appends m rows to preallocated amortized-doubling
+    buffers for X, the kernel matrix K, the Cholesky factor L, and L⁻¹.
+    With L⁻¹ maintained explicitly, the append's triangular solve
+    ``w = L₁₁⁻¹ K₁₂`` and every downstream ``fit_y``/``predict`` solve are
+    plain matmuls — O(n²) BLAS with no LAPACK refactor anywhere on the hot
+    path (numpy has no triangular solve; ``np.linalg.solve`` would LU-factor
+    the triangle at O(n³) again).  The factor persists across asks and only
+    new data extends it, so an ask after t tells costs O(n²·pool) instead of
+    the O(n³) ``fit_x`` refactor.  A numerically degenerate append (exactly
+    duplicated rows beyond what the noise jitter absorbs) falls back to one
+    full refactor — still amortized.
+    """
+
+    def __init__(self, lengthscale: float = 0.3, noise: float = 1e-3,
+                 signal: float = 1.0):
+        super().__init__(lengthscale, noise, signal)
+        self._n = 0
+        self._cap = 0
+        self._xb = self._kb = self._lb = self._lib = None
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _grow(self, need: int, dim: int) -> None:
+        if self._cap >= need:
+            return
+        cap = max(self._cap, 16)
+        while cap < need:
+            cap *= 2
+        xb = np.zeros((cap, dim))
+        kb = np.zeros((cap, cap))
+        lb = np.zeros((cap, cap))
+        lib = np.zeros((cap, cap))
+        n = self._n
+        if n:
+            xb[:n] = self._xb[:n]
+            kb[:n, :n] = self._kb[:n, :n]
+            lb[:n, :n] = self._lb[:n, :n]
+            lib[:n, :n] = self._lib[:n, :n]
+        self._xb, self._kb, self._lb, self._lib = xb, kb, lb, lib
+        self._cap = cap
+
+    def _sync_views(self) -> None:
+        n = self._n
+        self._x = self._xb[:n]
+        self._l = self._lb[:n, :n]
+        self._li = self._lib[:n, :n]
+
+    def _refactor(self) -> None:
+        """Full O(n³) rebuild of L and L⁻¹ from the stored kernel matrix."""
+        n = self._n
+        self._lb[:n, :n] = np.linalg.cholesky(self._kb[:n, :n])
+        self._lib[:n, :n] = np.linalg.solve(self._lb[:n, :n], np.eye(n))
+
+    def observe(self, x_new: np.ndarray) -> "IncrementalGP":
+        """Append m observation inputs; O(n²·m) against the cached factor."""
+        x_new = np.atleast_2d(np.asarray(x_new, float))
+        m = len(x_new)
+        if m == 0:
+            return self
+        n = self._n
+        self._grow(n + m, x_new.shape[1])
+        # the kernel matrix grows in place
+        k12 = self._k(self._xb[:n], x_new)                    # (n, m)
+        k22 = self._k(x_new, x_new) + self.noise * np.eye(m)
+        self._xb[n:n + m] = x_new
+        self._kb[:n, n:n + m] = k12
+        self._kb[n:n + m, :n] = k12.T
+        self._kb[n:n + m, n:n + m] = k22
+        self._n = n + m
+        # rank-append: L_new = [[L, 0], [wᵀ, chol(K₂₂ - wᵀw)]]
+        w = self._lib[:n, :n] @ k12                           # (n, m)
+        try:
+            l22 = np.linalg.cholesky(k22 - w.T @ w)
+        except np.linalg.LinAlgError:
+            self._refactor()
+            self._sync_views()
+            return self
+        li22 = np.linalg.solve(l22, np.eye(m))                # m is tiny
+        self._lb[n:n + m, :n] = w.T
+        self._lb[n:n + m, n:n + m] = l22
+        self._lib[n:n + m, :n] = -li22 @ (w.T @ self._lib[:n, :n])
+        self._lib[n:n + m, n:n + m] = li22
+        self._sync_views()
+        return self
+
+    def _k(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """RBF kernel via ‖a‖² + ‖b‖² − 2a·b — one GEMM instead of the
+        (N, M, K) subtract/square/sum broadcast.  Same values to fp round-
+        off; the GEMM releases the GIL, which is what lets the async
+        SearchDriver genuinely overlap GP math with client evaluation."""
+        a = np.asarray(a, float)
+        b = np.asarray(b, float)
+        d2 = (np.einsum("ij,ij->i", a, a)[:, None]
+              + np.einsum("ij,ij->i", b, b)[None, :] - 2.0 * (a @ b.T))
+        np.maximum(d2, 0.0, out=d2)
+        return self.signal * np.exp(-0.5 * d2 / self.ls ** 2)
+
+    def fit_x(self, x: np.ndarray) -> "IncrementalGP":
+        """Reset and bulk-load (equivalence/refit entry point)."""
+        self._n = 0
+        return self.observe(x)
+
+    def fit_y(self, y: np.ndarray) -> "IncrementalGP":
+        assert self._n > 0, "observe first"
+        self._ym = float(np.mean(y))
+        self._ys = float(np.std(y)) or 1.0
+        yn = (y - self._ym) / self._ys
+        self._alpha = self._li.T @ (self._li @ yn)
+        return self
+
+    def predict(self, xs: np.ndarray):
+        ks = self._k(xs, self._x)
+        mu = ks @ self._alpha
+        v = self._li @ ks.T
+        var = np.clip(self.signal - np.sum(v * v, axis=0), 1e-9, None)
+        return mu * self._ys + self._ym, np.sqrt(var) * self._ys
+
+    # -- multi-target path: one kernel sweep for every objective ------------
+    def fit_y_multi(self, Y: np.ndarray) -> "IncrementalGP":
+        """Solve for all J target columns at once against the cached factor
+        (the per-objective ``fit_y``/``predict`` pairs each recomputed the
+        candidate kernel block — the dominant per-ask cost)."""
+        assert self._n > 0, "observe first"
+        Y = np.asarray(Y, float)
+        self._ym_m = Y.mean(axis=0)
+        std = Y.std(axis=0)
+        self._ys_m = np.where(std > 0, std, 1.0)
+        yn = (Y - self._ym_m) / self._ys_m
+        self._alpha_m = self._li.T @ (self._li @ yn)          # (n, J)
+        return self
+
+    def predict_multi(self, xs: np.ndarray):
+        """(mu, sigma), each (M, J), from one ``_k``/solve sweep."""
+        ks = self._k(xs, self._x)
+        mu = ks @ self._alpha_m * self._ys_m + self._ym_m
+        v = self._li @ ks.T
+        var = np.clip(self.signal - np.sum(v * v, axis=0), 1e-9, None)
+        return mu, np.sqrt(var)[:, None] * self._ys_m
+
+    def predict_mean_multi(self, xs: np.ndarray) -> np.ndarray:
+        """Posterior means only — skips the (n, M) variance solve that
+        EHVI scoring (means-greedy) never uses."""
+        return self._k(xs, self._x) @ self._alpha_m * self._ys_m + self._ym_m
+
+
+# ---------------------------------------------------------------------------
+# normal CDF/PDF — pure numpy, no per-ask scipy import on the hot path
+# ---------------------------------------------------------------------------
+
+_SQRT2 = math.sqrt(2.0)
+_INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+
+def _erf(x: np.ndarray) -> np.ndarray:
+    """Vectorized erf (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7)."""
+    x = np.asarray(x, float)
+    sign = np.sign(x)
+    a = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * a)
+    poly = t * (0.254829592 + t * (-0.284496736 + t * (
+        1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+    return sign * (1.0 - poly * np.exp(-a * a))
+
+
+def norm_cdf(z: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + _erf(np.asarray(z, float) / _SQRT2))
+
+
+def norm_pdf(z: np.ndarray) -> np.ndarray:
+    z = np.asarray(z, float)
+    return _INV_SQRT_2PI * np.exp(-0.5 * z * z)
+
+
+def expected_improvement(mu: np.ndarray, sigma: np.ndarray, best: float) -> np.ndarray:
     z = (best - mu) / sigma
-    return (best - mu) * norm.cdf(z) + sigma * norm.pdf(z)
+    return (best - mu) * norm_cdf(z) + sigma * norm_pdf(z)
 
 
 def ehvi_improvements(ys: np.ndarray, ref: np.ndarray,
@@ -121,24 +309,54 @@ def _ehvi_improvements_loop(ys: np.ndarray, ref: np.ndarray,
 
 class BayesOpt(SearchAlgorithm):
     def __init__(self, space, seed: int = 0, n_init: int = 12,
-                 pool_size: int = 512, strategy: str = "parego"):
+                 pool_size: int = 512, strategy: str = "parego",
+                 gp_mode: str = "incremental"):
         super().__init__(space, seed)
         self.n_init = n_init
         self.pool_size = pool_size
         assert strategy in ("parego", "ehvi")
+        assert gp_mode in GP_MODES
         self.strategy = strategy
+        self.gp_mode = gp_mode
+        self._gp = IncrementalGP()
+        self._gp_pending: List[np.ndarray] = []
+        self._front_y: Optional[np.ndarray] = None   # maintained Pareto front
         self._seen = set()
 
-    def _pool(self) -> List[Dict]:
-        pool, keys = [], set()
-        while len(pool) < self.pool_size:
-            c = self.space.sample(self.rng)
-            k = self._key(c)
-            if k in keys or k in self._seen:
-                continue
-            keys.add(k)
-            pool.append(c)
-        return pool
+    def tell(self, knobs: Dict, y: np.ndarray) -> None:
+        super().tell(knobs, y)
+        if self.gp_mode == "incremental":
+            # queued for a single block rank-append at the next ask boundary
+            # (one O(n²·m) BLAS append for m tells instead of m tiny ones)
+            self._gp_pending.append(self.space.encode(knobs))
+            self._update_front(np.asarray(y, float))
+
+    def _update_front(self, y: np.ndarray) -> None:
+        """O(front) incremental Pareto update, so EHVI asks never rescan all
+        n observations for the nondominated set."""
+        if self._front_y is None or self._front_y.shape[1] != len(y):
+            self._front_y = y[None, :]
+            return
+        f = self._front_y
+        le = np.all(f <= y, axis=1)
+        if np.any(le & np.any(f < y, axis=1)):
+            return                                   # dominated: front unchanged
+        if np.any(le & np.all(y <= f, axis=1)):
+            return                                   # exact duplicate of a
+        keep = ~(np.all(y <= f, axis=1) & np.any(y < f, axis=1))   # front row
+        self._front_y = np.vstack([f[keep], y[None, :]])
+
+    def _surrogate(self) -> GP:
+        """The ask-time GP: the cached incremental factor — extended by one
+        rank-append over the tells since the last ask, invalidated only by
+        new data — or, in refit mode, a fresh O(n³) factorisation (the
+        pre-incremental path, kept for benchmarking and equivalence)."""
+        if self.gp_mode == "incremental":
+            if self._gp_pending:
+                self._gp.observe(np.stack(self._gp_pending))
+                self._gp_pending.clear()
+            return self._gp
+        return GP().fit_x(self.observed_points())
 
     def _scalarise(self, ys: np.ndarray) -> np.ndarray:
         lo, hi = ys.min(0), ys.max(0)
@@ -146,15 +364,19 @@ class BayesOpt(SearchAlgorithm):
         w = self.rng.dirichlet(np.ones(ys.shape[1]))
         return np.max(w * z, axis=1) + 0.05 * np.sum(w * z, axis=1)
 
-    def _take_best(self, pool: List[Dict], order: np.ndarray, n: int,
-                   out: List[Dict]) -> None:
-        """Append up to n unseen pool members in score order, pad randomly."""
+    def _take_best(self, idx: np.ndarray, flats: np.ndarray,
+                   order: np.ndarray, n: int, out: List[Dict]) -> None:
+        """Append up to n unseen pool members in score order, pad randomly.
+
+        The pool stays arrays throughout scoring; only the few configs
+        actually picked are decoded to knob dicts here."""
         for i in order:
             if len(out) >= n:
                 return
-            if self._key(pool[i]) not in self._seen:
-                self._seen.add(self._key(pool[i]))
-                out.append(pool[i])
+            f = int(flats[i])
+            if f not in self._seen:
+                self._seen.add(f)
+                out.append(self.space.index_decode(idx[i]))
         while len(out) < n:
             out.append(self.space.sample(self.rng))
 
@@ -164,33 +386,39 @@ class BayesOpt(SearchAlgorithm):
         if len(self.history_x) < self.n_init:
             while len(out) < n:
                 c = self.space.sample(self.rng)
-                if self._key(c) not in self._seen:
-                    self._seen.add(self._key(c))
+                k = self._flat_key(c)
+                if k not in self._seen:
+                    self._seen.add(k)
                     out.append(c)
             return out
 
-        xs = self.observed_points()
-        pool = self._pool()
-        xp = np.stack([self.space.encode(c) for c in pool])
-        gp = GP().fit_x(xs)   # one Cholesky for every pick in this ask
+        idx, xp, flats = self._fresh_pool(self.pool_size, exclude=self._seen)
+        gp = self._surrogate()   # one cached/derived factor for every pick
 
         if self.strategy == "ehvi" and ys.shape[1] == 2:
             # posterior means per objective (shared factor), then one
             # vectorized incremental-HVI sweep scores the whole pool; the
             # scores do not change between picks, so the n picks are simply
             # the n best-scoring unseen candidates
-            mus = np.stack([gp.fit_y(ys[:, j]).predict(xp)[0]
-                            for j in range(ys.shape[1])], axis=1)
             ref = ys.max(0) * 1.1 + 1e-9
-            score = ehvi_improvements(ys, ref, mus)
-            self._take_best(pool, np.argsort(-score), n, out)
+            if self.gp_mode == "incremental":
+                # one mean-only kernel sweep for both objectives, scored
+                # against the maintained front (same staircase as passing
+                # all of ys: ehvi reduces to the nondominated set anyway)
+                mus = gp.fit_y_multi(ys).predict_mean_multi(xp)
+                score = ehvi_improvements(self._front_y, ref, mus)
+            else:
+                mus = np.stack([gp.fit_y(ys[:, j]).predict(xp)[0]
+                                for j in range(ys.shape[1])], axis=1)
+                score = ehvi_improvements(ys, ref, mus)
+            self._take_best(idx, flats, np.argsort(-score), n, out)
             return out
 
         for _ in range(n):   # parego: fresh scalarisation per pick
             s = self._scalarise(ys)
             mu, sig = gp.fit_y(s).predict(xp)
             score = expected_improvement(mu, sig, float(np.min(s)))
-            self._take_best(pool, np.argsort(-score), len(out) + 1, out)
+            self._take_best(idx, flats, np.argsort(-score), len(out) + 1, out)
         return out
 
 
@@ -219,12 +447,22 @@ class PAL(SearchAlgorithm):
     largest among points that could still be Pareto-optimal."""
 
     def __init__(self, space, seed: int = 0, n_init: int = 12,
-                 pool_size: int = 512, beta: float = 1.8):
+                 pool_size: int = 512, beta: float = 1.8,
+                 gp_mode: str = "incremental"):
         super().__init__(space, seed)
         self.n_init = n_init
         self.pool_size = pool_size
         self.beta = beta
+        assert gp_mode in GP_MODES
+        self.gp_mode = gp_mode
+        self._gp = IncrementalGP()
+        self._gp_pending: List[np.ndarray] = []
         self._seen = set()
+
+    def tell(self, knobs: Dict, y: np.ndarray) -> None:
+        super().tell(knobs, y)
+        if self.gp_mode == "incremental":
+            self._gp_pending.append(self.space.encode(knobs))
 
     def ask(self, n: int) -> List[Dict]:
         out: List[Dict] = []
@@ -232,38 +470,39 @@ class PAL(SearchAlgorithm):
         if len(self.history_x) < self.n_init:
             while len(out) < n:
                 c = self.space.sample(self.rng)
-                if self._key(c) not in self._seen:
-                    self._seen.add(self._key(c))
+                k = self._flat_key(c)
+                if k not in self._seen:
+                    self._seen.add(k)
                     out.append(c)
             return out
 
-        xs = self.observed_points()
-        pool, keys = [], set()
-        while len(pool) < self.pool_size:
-            c = self.space.sample(self.rng)
-            k = self._key(c)
-            if k not in keys and k not in self._seen:
-                keys.add(k)
-                pool.append(c)
-        xp = np.stack([self.space.encode(c) for c in pool])
-        gp = GP().fit_x(xs)   # shared Cholesky across the per-objective fits
-        mus, sigs = [], []
-        for j in range(ys.shape[1]):
-            mu, sig = gp.fit_y(ys[:, j]).predict(xp)
-            mus.append(mu)
-            sigs.append(sig)
-        mu = np.stack(mus, 1)
-        sig = np.stack(sigs, 1)
+        idx, xp, flats = self._fresh_pool(self.pool_size, exclude=self._seen)
+        # shared (cached in incremental mode) factor across per-objective fits
+        if self.gp_mode == "incremental":
+            if self._gp_pending:
+                self._gp.observe(np.stack(self._gp_pending))
+                self._gp_pending.clear()
+            mu, sig = self._gp.fit_y_multi(ys).predict_multi(xp)
+        else:
+            gp = GP().fit_x(self.observed_points())
+            mus, sigs = [], []
+            for j in range(ys.shape[1]):
+                m, s = gp.fit_y(ys[:, j]).predict(xp)
+                mus.append(m)
+                sigs.append(s)
+            mu = np.stack(mus, 1)
+            sig = np.stack(sigs, 1)
         lcb = mu - self.beta * sig
         maybe = pal_maybe_pareto(ys, lcb)
         width = np.sum(sig, axis=1) * np.where(maybe, 1.0, 0.05)
         for i in np.argsort(-width):
             if len(out) >= n:
                 break
-            if self._key(pool[i]) in self._seen:
+            f = int(flats[i])
+            if f in self._seen:
                 continue
-            self._seen.add(self._key(pool[i]))
-            out.append(pool[i])
+            self._seen.add(f)
+            out.append(self.space.index_decode(idx[i]))
         while len(out) < n:
             out.append(self.space.sample(self.rng))
         return out

@@ -1,0 +1,182 @@
+"""SearchDriver — overlap search math with client-side evaluation.
+
+After the batched/pipelined host work, the transport side of the DSE loop
+sustains tens of thousands of evals/sec — but a model-based searcher
+(BayesOpt/PAL) runs its GP algebra *inline* in ``JHost.explore``, so every
+ask stalls the whole fleet.  ``SearchDriver`` wraps any ``SearchAlgorithm``
+and moves that math off the host's critical path:
+
+* ``mode="sync"`` — pure pass-through.  Every ``ask``/``tell`` runs inline
+  on the caller's thread; picks are bit-identical to the bare algorithm
+  (this is the equivalence baseline, and the safe default for cheap
+  searchers like random/grid where a worker thread buys nothing).
+* ``mode="async"`` — a background worker precomputes asks into a buffer
+  while clients evaluate the current chunks.  ``tell``s are buffered and
+  folded into the algorithm at ask boundaries — stale-tolerant by design: a
+  precomputed pick may lag the newest few observations, exactly like a
+  pipelined chunk that was dispatched before its predecessor's results
+  landed.  The host's side of the contract is ``poll_ask``: non-blocking
+  whenever evaluation work is in flight (``DispatchScheduler.busy()``), and
+  blocking only when the loop cannot otherwise make progress.  The
+  scheduler's ``want(lookahead=...)`` is the matching backpressure signal —
+  it sizes the precompute buffer so a freed client slot tops up from
+  already-computed picks instead of waiting on GP math.
+
+The wrapped algorithm is only ever touched by one thread at a time: in sync
+mode the caller's, in async mode the worker's (the host thread just moves
+dicts in and out of the buffers under the driver lock).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.search.base import SearchAlgorithm
+
+MODES = ("sync", "async")
+
+
+class SearchDriver:
+    """Plug-in wrapper: speaks ask/tell plus the host's non-blocking hooks."""
+
+    def __init__(self, algo: SearchAlgorithm, mode: str = "async",
+                 round_size: int = 32):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        self.algo = algo
+        self.mode = mode
+        self.round_size = max(int(round_size), 1)
+        self._buf: Deque[Dict] = deque()
+        self._tells: Deque[Tuple[Dict, np.ndarray]] = deque()
+        self._target = 0
+        self._closing = False
+        self._err: Optional[BaseException] = None
+        self._cond = threading.Condition()
+        self.n_rounds = 0          # worker ask rounds computed
+        self.n_precomputed = 0     # configs ever placed in the buffer
+        self.n_tells_folded = 0    # buffered tells folded into the algo
+        self._worker: Optional[threading.Thread] = None
+        if mode == "async":
+            self._worker = threading.Thread(target=self._run, daemon=True,
+                                            name="search-driver")
+            self._worker.start()
+
+    # -- SearchAlgorithm protocol ---------------------------------------------
+    def ask(self, n: int) -> List[Dict]:
+        """Blocking ask: exactly n picks (drop-in for a bare algorithm)."""
+        if self.mode == "sync":
+            return self.algo.ask(n)
+        out: List[Dict] = []
+        while len(out) < n:
+            out.extend(self.poll_ask(n - len(out), need=True))
+        return out
+
+    def tell(self, knobs: Dict, y: np.ndarray) -> None:
+        if self.mode == "sync":
+            self.algo.tell(knobs, y)
+            return
+        with self._cond:
+            self._tells.append((dict(knobs), np.asarray(y, float)))
+            self._cond.notify_all()
+
+    # -- host-facing async hooks ----------------------------------------------
+    def poll_ask(self, n: int, need: bool = False) -> List[Dict]:
+        """Up to n precomputed picks, possibly none.
+
+        Blocks only when ``need`` is set (the host has nothing in flight and
+        cannot make progress without fresh configs); otherwise returns
+        whatever the worker has buffered and lets the host go back to
+        pulling results while the next ask computes.
+        """
+        if self.mode == "sync":
+            return self.algo.ask(n)
+        with self._cond:
+            self._target = max(self._target, n)
+            self._cond.notify_all()            # demand may wake the worker
+            while need and not self._buf and self._err is None \
+                    and not self._closing:
+                self._cond.wait()
+            if self._err is not None:
+                raise RuntimeError("search worker died") from self._err
+            out = [self._buf.popleft()
+                   for _ in range(min(n, len(self._buf)))]
+            if out:
+                self._cond.notify_all()        # buffer has room: refill
+            return out
+
+    def note_demand(self, n: int) -> None:
+        """Backpressure from the scheduler: keep ~n picks precomputed."""
+        if self.mode == "sync":
+            return
+        with self._cond:
+            self._target = max(int(n), 1)
+            self._cond.notify_all()
+
+    def ready(self) -> int:
+        """Precomputed picks available without blocking."""
+        if self.mode == "sync":
+            return 0
+        with self._cond:
+            return len(self._buf)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self, timeout_s: float = 10.0) -> None:
+        if self._worker is None:
+            return
+        with self._cond:
+            self._closing = True
+            self._cond.notify_all()
+        self._worker.join(timeout=timeout_s)
+
+    def __enter__(self) -> "SearchDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> Dict[str, float]:
+        with self._cond:
+            return {"mode": self.mode, "buffered": len(self._buf),
+                    "pending_tells": len(self._tells),
+                    "rounds": self.n_rounds,
+                    "precomputed": self.n_precomputed,
+                    "tells_folded": self.n_tells_folded}
+
+    # -- worker ---------------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while (not self._closing and not self._tells
+                       and len(self._buf) >= max(self._target, 1)):
+                    self._cond.wait()
+                if self._closing:
+                    return
+                tells = list(self._tells)
+                self._tells.clear()
+                want = max(self._target, 1) - len(self._buf)
+                # empty buffer means the host may be blocked on us: compute
+                # a small round first to unblock it, then get ahead with
+                # full rounds while it dispatches
+                cap = self.round_size if self._buf else max(
+                    min(8, self.round_size), 1)
+            try:
+                # fold buffered observations at the ask boundary, then
+                # precompute the next round while clients keep evaluating
+                for knobs, y in tells:
+                    self.algo.tell(knobs, y)
+                picks = self.algo.ask(min(want, cap)) if want > 0 else []
+            except BaseException as e:        # surface in the host thread
+                with self._cond:
+                    self._err = e
+                    self._cond.notify_all()
+                return
+            with self._cond:
+                self.n_tells_folded += len(tells)
+                if picks:
+                    self.n_rounds += 1
+                    self.n_precomputed += len(picks)
+                    self._buf.extend(picks)
+                self._cond.notify_all()

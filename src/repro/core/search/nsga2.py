@@ -17,6 +17,34 @@ from repro.core.search.base import SearchAlgorithm
 
 
 def fast_nondominated_sort(ys: np.ndarray) -> List[np.ndarray]:
+    """Non-domination fronts via one ``(N, N, K)`` broadcast.
+
+    The full pairwise domination matrix is computed in one shot; front
+    peeling is then pure counter arithmetic (subtract each peeled front's
+    row-sums) instead of the O(N²) Python double loop.  Front membership and
+    order match the loop reference (``_fast_nondominated_sort_loop``).
+    """
+    ys = np.asarray(ys, float)
+    n = len(ys)
+    if n == 0:
+        return []
+    le = np.all(ys[:, None, :] <= ys[None, :, :], axis=2)
+    lt = np.any(ys[:, None, :] < ys[None, :, :], axis=2)
+    dominates = le & lt                       # [i, j]: i dominates j
+    dom_count = dominates.sum(axis=0)
+    assigned = np.zeros(n, bool)
+    fronts = []
+    current = np.where(dom_count == 0)[0]
+    while current.size:
+        fronts.append(current)
+        assigned[current] = True
+        dom_count = dom_count - dominates[current].sum(axis=0)
+        current = np.where((dom_count == 0) & ~assigned)[0]
+    return fronts
+
+
+def _fast_nondominated_sort_loop(ys: np.ndarray) -> List[np.ndarray]:
+    """Reference O(N²) Python implementation (kept for equivalence tests)."""
     n = len(ys)
     dominated_by = [[] for _ in range(n)]
     dom_count = np.zeros(n, int)

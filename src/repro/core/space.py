@@ -64,6 +64,42 @@ class DesignSpace:
     def sample(self, rng: np.random.Generator) -> Dict[str, Any]:
         return {k.name: k.values[rng.integers(len(k.values))] for k in self.knobs}
 
+    def sample_index_batch(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """``(n, K)`` int64 matrix of value indices — a whole candidate pool
+        in K vectorized rng calls instead of n·K scalar ones."""
+        if not self.knobs:
+            return np.zeros((n, 0), np.int64)
+        return np.stack([rng.integers(len(k.values), size=n)
+                         for k in self.knobs], axis=1)
+
+    def sample_batch(self, rng: np.random.Generator, n: int) -> List[Dict]:
+        return self.index_decode_batch(self.sample_index_batch(rng, n))
+
+    def index_decode_batch(self, idx: np.ndarray) -> List[Dict]:
+        names = [k.name for k in self.knobs]
+        values = [k.values for k in self.knobs]
+        return [{nm: vs[int(i)] for nm, vs, i in zip(names, values, row)}
+                for row in np.asarray(idx)]
+
+    def index_encode_batch(self, configs: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """``(n, K)`` int64 value-index matrix for a list of configs."""
+        luts = [{v: i for i, v in enumerate(k.values)} for k in self.knobs]
+        return np.asarray([[lut[c[k.name]]
+                            for lut, k in zip(luts, self.knobs)]
+                           for c in configs], np.int64).reshape(len(configs),
+                                                                len(self.knobs))
+
+    def encode_index_batch(self, idx: np.ndarray) -> np.ndarray:
+        """Normalise an ``(n, K)`` index matrix to [0, 1] coordinates (the
+        batch analogue of ``encode``, one broadcast divide)."""
+        scale = np.asarray([max(len(k.values) - 1, 1) for k in self.knobs],
+                           np.float64)
+        return np.asarray(idx, np.float64) / scale
+
+    def encode_batch(self, configs: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """``(n, K)`` search coordinates for a list of configs in one shot."""
+        return self.encode_index_batch(self.index_encode_batch(configs))
+
     def encode(self, config: Dict[str, Any]) -> np.ndarray:
         """Ordinal indices normalised to [0, 1] — search-algorithm coordinates."""
         out = []

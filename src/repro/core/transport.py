@@ -103,12 +103,81 @@ def unframe_batch(msg: Optional[dict]) -> List[dict]:
     return [msg]
 
 
+class WireStats:
+    """Post-codec bytes/frames actually put on the wire, per peer.
+
+    Host transports count outbound bytes per client and inbound bytes per
+    reporting client (attributed from the decoded frame's ``client_id``
+    field/column).  The host attaches ``wire_summary`` to the scheduler so
+    ``DispatchScheduler.stats()`` — and the ``progress=True`` line — can
+    show what each codec really costs on the wire.
+    """
+
+    def __init__(self):
+        self.out_bytes: Dict[int, int] = {}
+        self.out_frames: Dict[int, int] = {}
+        self.in_bytes: Dict[int, int] = {}
+        self.in_frames: Dict[int, int] = {}
+
+    def sent(self, client_id: int, nbytes: int) -> None:
+        self.out_bytes[client_id] = self.out_bytes.get(client_id, 0) + nbytes
+        self.out_frames[client_id] = self.out_frames.get(client_id, 0) + 1
+
+    def received(self, msg: Optional[dict], nbytes: int) -> None:
+        """Attribute an inbound frame to its reporting client (-1 unknown)."""
+        cid = -1
+        if isinstance(msg, dict):
+            v = msg.get("client_id")
+            if v is None and msg.get("cmd") == BATCH_COLS_CMD:
+                col = msg.get("plain", {}).get("client_id")
+                v = col[0] if col else None
+            elif v is None and msg.get("cmd") == BATCH_CMD:
+                items = msg.get("items")
+                v = items[0].get("client_id") if items else None
+            if isinstance(v, int):
+                cid = v
+        self.in_bytes[cid] = self.in_bytes.get(cid, 0) + nbytes
+        self.in_frames[cid] = self.in_frames.get(cid, 0) + 1
+
+    def summary(self) -> Dict:
+        per_client = {
+            cid: {"out_kb": round(self.out_bytes.get(cid, 0) / 1e3, 2),
+                  "out_frames": self.out_frames.get(cid, 0),
+                  "in_kb": round(self.in_bytes.get(cid, 0) / 1e3, 2),
+                  "in_frames": self.in_frames.get(cid, 0)}
+            for cid in sorted(set(self.out_bytes) | set(self.in_bytes))}
+        return {
+            "wire_out_mb": round(sum(self.out_bytes.values()) / 1e6, 6),
+            "wire_in_mb": round(sum(self.in_bytes.values()) / 1e6, 6),
+            "wire_out_frames": sum(self.out_frames.values()),
+            "wire_in_frames": sum(self.in_frames.values()),
+            "wire_per_client": per_client,
+        }
+
+
 class HostTransport:
     def push(self, client_id: int, msg: dict) -> None:
         raise NotImplementedError
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         raise NotImplementedError
+
+    def _wire(self) -> WireStats:
+        w = getattr(self, "wire", None)
+        if w is None:
+            w = self.wire = WireStats()
+        return w
+
+    def wire_summary(self) -> Dict:
+        """Codec + bytes-on-wire stats; {} until something was counted."""
+        w = getattr(self, "wire", None)
+        if w is None:
+            return {}
+        s = w.summary()
+        codec = getattr(self, "_codec", None)
+        if codec is not None:
+            s["codec"] = codec.name
+        return s
 
     def push_many(self, client_id: int, msgs: List[dict]) -> None:
         """Ship a whole chunk of testConfigs as one framed message."""
@@ -192,13 +261,18 @@ class ZmqHostTransport(HostTransport):
             self._push[cid] = s
 
     def push(self, client_id: int, msg: dict) -> None:
-        self._push[client_id].send(self._codec.encode(msg))
+        data = self._codec.encode(msg)
+        self._wire().sent(client_id, len(data))
+        self._push[client_id].send(data)
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         import zmq
 
         if self._pull.poll(int(timeout_s * 1000), zmq.POLLIN):
-            return decode_wire(self._pull.recv())
+            data = self._pull.recv()
+            msg = decode_wire(data)
+            self._wire().received(msg, len(data))
+            return msg
         return None
 
     def client_ids(self) -> List[int]:
@@ -291,13 +365,18 @@ class LoopbackHostTransport(HostTransport):
 
     def push(self, client_id: int, msg: dict) -> None:
         # round-trip through the codec to keep wire-format parity with ZMQ
-        self._pair.to_client[client_id].put(self._codec.encode(msg))
+        data = self._codec.encode(msg)
+        self._wire().sent(client_id, len(data))
+        self._pair.to_client[client_id].put(data)
 
     def pull(self, timeout_s: float) -> Optional[dict]:
         try:
-            return decode_wire(self._pair.to_host.get(timeout=timeout_s))
+            data = self._pair.to_host.get(timeout=timeout_s)
         except queue.Empty:
             return None
+        msg = decode_wire(data)
+        self._wire().received(msg, len(data))
+        return msg
 
     def client_ids(self) -> List[int]:
         return sorted(self._pair.to_client)

@@ -54,6 +54,17 @@ def parse_args():
     p.add_argument("--codec", default="json", choices=["json", "binary"],
                    help="wire codec: binary packs columnar frames' numeric "
                         "columns as typed arrays (fleet-friendly)")
+    p.add_argument("--async-search", action="store_true",
+                   help="precompute asks in a background worker and fold "
+                        "tells in at ask boundaries (SearchDriver), so "
+                        "model-based search math overlaps with client "
+                        "evaluation instead of stalling the fleet")
+    p.add_argument("--gp", default="incremental",
+                   choices=["incremental", "refit"],
+                   help="bayesopt/pal surrogate update: incremental = "
+                        "rank-append Cholesky per tell (O(n^2), cached "
+                        "across asks); refit = full O(n^3) refactor per "
+                        "ask (pre-PR behaviour, for benchmarking)")
     return p.parse_args()
 
 
@@ -153,12 +164,24 @@ def main():
                         knob_names=[k.name for k in space],
                         metric_names=("time_s", "power_w"))
     host = JHost(pair.host(), store, timeout_s=args.timeout, poll_s=0.05)
-    algo = ALGORITHMS[args.algorithm](space, seed=args.seed)
+    algo_kw = ({"gp_mode": args.gp}
+               if args.algorithm in ("bayesopt", "pal") else {})
+    algo = ALGORITHMS[args.algorithm](space, seed=args.seed, **algo_kw)
+    search = algo
+    if args.async_search:
+        from repro.core import SearchDriver
+
+        search = SearchDriver(algo, mode="async")
     t0 = time.time()
-    host.explore(algo, args.workload, args.shape, args.samples,
-                 objectives=("time_s", "power_w"), progress=True,
-                 batch_size=args.batch_size, dispatch=args.dispatch,
-                 chunk_budget_ms=args.chunk_budget_ms)
+    try:
+        host.explore(search, args.workload, args.shape, args.samples,
+                     objectives=("time_s", "power_w"), progress=True,
+                     batch_size=args.batch_size, dispatch=args.dispatch,
+                     chunk_budget_ms=args.chunk_budget_ms)
+    finally:
+        if search is not algo:
+            print(f"[explore] search driver: {search.stats()}")
+            search.close()
     host.stop_clients()
     dt = time.time() - t0
 

@@ -442,8 +442,8 @@ def _reference_ehvi_ask(algo, n):
     """The seed's per-candidate-hypervolume greedy loop, as a test oracle."""
     ys = algo.observed_values()
     xs = algo.observed_points()
-    pool = algo._pool()
-    xp = np.stack([algo.space.encode(c) for c in pool])
+    idx, xp, flats = algo._fresh_pool(algo.pool_size, exclude=algo._seen)
+    pool = algo.space.index_decode_batch(idx)
     out = []
     for _ in range(n):
         mus = np.stack([GP().fit(xs, ys[:, j]).predict(xp)[0]
@@ -451,8 +451,8 @@ def _reference_ehvi_ask(algo, n):
         ref = ys.max(0) * 1.1 + 1e-9
         score = _ehvi_improvements_loop(ys, ref, mus)   # hypervolume_2d calls
         for i in np.argsort(-score):
-            if algo._key(pool[i]) not in algo._seen:
-                algo._seen.add(algo._key(pool[i]))
+            if int(flats[i]) not in algo._seen:
+                algo._seen.add(int(flats[i]))
                 out.append(pool[i])
                 break
         else:

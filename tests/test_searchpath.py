@@ -1,0 +1,399 @@
+"""Search-throughput suite (async search–evaluate overlap PR): incremental
+GP rank-append vs full-refit equivalence (incl. the doubling-growth
+boundary), SearchDriver sync bit-identity + async liveness, vectorized
+candidate pools / batch space helpers, the erf-based normal CDF/PDF, the
+broadcast non-dominated sort, scheduler backpressure hooks, and per-client
+wire stats surfaced through ``DispatchScheduler.stats()``."""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import (BayesOpt, DispatchScheduler, JClient, JConfig, JHost,
+                        PAL, RandomSearch, ResultStore, SearchDriver,
+                        TestConfig, transport, tpu_pod_space)
+from repro.core.results import _nondominated_mask_loop, nondominated_mask
+from repro.core.search.bayesopt import (GP, IncrementalGP,
+                                        expected_improvement, norm_cdf,
+                                        norm_pdf)
+from repro.core.search.nsga2 import (_fast_nondominated_sort_loop,
+                                     fast_nondominated_sort)
+from repro.core.space import DesignSpace, Knob
+from repro.roofline.analysis import Artifact
+
+
+def _toy_objectives(space, knobs):
+    x = space.encode(knobs)
+    time = 2.0 - 1.2 * x[0] + 0.4 * x[1] + 0.1 * np.sin(7 * x.sum())
+    power = 0.5 + 1.5 * x[0] ** 2 + 0.2 * x[2]
+    return np.array([time, power])
+
+
+# ---------------------------------------------------------------------------
+# incremental GP: rank-append Cholesky == full refit
+# ---------------------------------------------------------------------------
+
+
+def test_rank_append_matches_full_refit_over_random_history():
+    """Appends of mixed block sizes — including ones that cross the
+    amortized-doubling capacity boundaries (16, 32, 64) — must predict
+    identically (mean and variance) to a from-scratch factorisation."""
+    rng = np.random.default_rng(0)
+    inc = IncrementalGP()
+    xs = np.zeros((0, 5))
+    for step in (1, 1, 3, 1, 10, 1, 2, 17, 1, 31):
+        xn = rng.random((step, 5))
+        xs = np.vstack([xs, xn])
+        inc.observe(xn)
+        assert len(inc) == len(xs)
+        y = rng.random(len(xs))
+        ref = GP().fit(xs, y)
+        inc.fit_y(y)
+        q = rng.random((7, 5))
+        mu_r, sig_r = ref.predict(q)
+        mu_i, sig_i = inc.predict(q)
+        np.testing.assert_allclose(mu_i, mu_r, atol=1e-8)
+        np.testing.assert_allclose(sig_i, sig_r, atol=1e-8)
+    assert inc._cap >= len(xs)          # grew through several doublings
+
+
+def test_rank_append_kernel_matrix_grows_in_place():
+    rng = np.random.default_rng(1)
+    inc = IncrementalGP()
+    xs = rng.random((20, 3))
+    inc.observe(xs[:12]).observe(xs[12:])
+    n = len(inc)
+    expect = inc._k(xs, xs) + inc.noise * np.eye(n)
+    np.testing.assert_allclose(inc._kb[:n, :n], expect, atol=1e-12)
+    # the maintained explicit inverse really is L⁻¹
+    np.testing.assert_allclose(inc._li @ inc._l, np.eye(n), atol=1e-8)
+
+
+def test_fit_y_multi_matches_per_objective_fits():
+    rng = np.random.default_rng(2)
+    xs = rng.random((30, 4))
+    Y = rng.random((30, 3))
+    q = rng.random((9, 4))
+    inc = IncrementalGP().fit_x(xs)
+    mu_m, sig_m = inc.fit_y_multi(Y).predict_multi(q)
+    mu_mean = inc.predict_mean_multi(q)
+    for j in range(Y.shape[1]):
+        mu_j, sig_j = inc.fit_y(Y[:, j]).predict(q)
+        np.testing.assert_allclose(mu_m[:, j], mu_j, atol=1e-10)
+        np.testing.assert_allclose(sig_m[:, j], sig_j, atol=1e-10)
+        np.testing.assert_allclose(mu_mean[:, j], mu_j, atol=1e-10)
+
+
+def test_bayesopt_incremental_picks_match_refit():
+    """Same seed, same toy problem: the cached-factor path must pick the
+    same configs as the per-ask refit path (fp round-off must not flip
+    the EHVI ranking on this deterministic problem)."""
+    space = tpu_pod_space(n_chips=256)
+    seqs = {}
+    for mode in ("incremental", "refit"):
+        algo = BayesOpt(space, seed=3, n_init=6, pool_size=64,
+                        strategy="ehvi", gp_mode=mode)
+        seq = []
+        for _ in range(35):
+            c = algo.ask(1)[0]
+            algo.tell(c, _toy_objectives(space, c))
+            seq.append(c)
+        seqs[mode] = seq
+    assert seqs["incremental"] == seqs["refit"]
+
+
+def test_maintained_front_stays_bounded_under_duplicate_tells():
+    space = tpu_pod_space(n_chips=256)
+    algo = BayesOpt(space, seed=0, n_init=2, strategy="ehvi")
+    c = space.sample(np.random.default_rng(0))
+    for _ in range(10):
+        algo.tell(c, np.array([1.0, 2.0]))     # identical nondominated y
+    assert len(algo._front_y) == 1
+    algo.tell(c, np.array([0.5, 1.0]))         # dominates: replaces
+    np.testing.assert_array_equal(algo._front_y, [[0.5, 1.0]])
+    algo.tell(c, np.array([0.4, 1.5]))         # incomparable: joins front
+    assert len(algo._front_y) == 2
+
+
+def test_pal_runs_in_both_gp_modes():
+    space = tpu_pod_space(n_chips=256)
+    for mode in ("incremental", "refit"):
+        algo = PAL(space, seed=3, n_init=6, pool_size=64, gp_mode=mode)
+        for _ in range(20):
+            c = algo.ask(1)[0]
+            algo.tell(c, _toy_objectives(space, c))
+        assert len(algo.history_x) == 20
+
+
+# ---------------------------------------------------------------------------
+# SearchDriver
+# ---------------------------------------------------------------------------
+
+
+def test_sync_driver_is_bit_identical_to_bare_algorithm():
+    space = tpu_pod_space(n_chips=256)
+    bare = BayesOpt(space, seed=5, n_init=6, pool_size=64, strategy="ehvi")
+    wrapped = SearchDriver(
+        BayesOpt(space, seed=5, n_init=6, pool_size=64, strategy="ehvi"),
+        mode="sync")
+    for _ in range(8):
+        a, b = bare.ask(4), wrapped.ask(4)
+        assert a == b
+        for c in a:
+            y = _toy_objectives(space, c)
+            bare.tell(c, y)
+            wrapped.tell(c, y)
+
+
+def test_async_driver_delivers_and_folds_tells():
+    space = tpu_pod_space(n_chips=256)
+    algo = BayesOpt(space, seed=7, n_init=6, pool_size=64, strategy="ehvi")
+    with SearchDriver(algo, mode="async", round_size=8) as drv:
+        got = []
+        for _ in range(10):
+            picks = drv.ask(3)          # blocking form always yields n
+            assert len(picks) == 3
+            for c in picks:
+                drv.tell(c, _toy_objectives(space, c))
+                got.append(c)
+        s = drv.stats()
+    assert s["precomputed"] >= len(got)
+    assert s["tells_folded"] + s["pending_tells"] == len(got)
+    # model-based dedupe survived the driver: no repeated configs
+    keys = [tuple(sorted((k, str(v)) for k, v in c.items())) for c in got]
+    assert len(set(keys)) == len(keys)
+
+
+def test_async_driver_poll_ask_does_not_block_without_need():
+    space = tpu_pod_space(n_chips=256)
+    drv = SearchDriver(RandomSearch(space, seed=0), mode="async",
+                       round_size=4)
+    try:
+        out = drv.poll_ask(2, need=False)    # may be empty, must not hang
+        assert isinstance(out, list) and len(out) <= 2
+        assert len(drv.ask(5)) == 5          # blocking form fills up
+    finally:
+        drv.close()
+
+
+def test_async_driver_surfaces_worker_exception():
+    class Exploding:
+        def ask(self, n):
+            raise ValueError("kaboom")
+
+        def tell(self, knobs, y):
+            pass
+
+    drv = SearchDriver(Exploding(), mode="async")
+    with pytest.raises(RuntimeError, match="search worker died"):
+        drv.ask(1)
+    drv.close()
+
+
+def test_driver_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        SearchDriver(RandomSearch(tpu_pod_space(n_chips=256)), mode="turbo")
+
+
+# ---------------------------------------------------------------------------
+# vectorized pools + batch space helpers
+# ---------------------------------------------------------------------------
+
+
+def test_sample_batch_and_encode_batch_match_scalar_paths():
+    space = tpu_pod_space(n_chips=256)
+    rng = np.random.default_rng(0)
+    cfgs = space.sample_batch(rng, 50)
+    assert len(cfgs) == 50
+    for c in cfgs:
+        for k in space.knobs:
+            assert c[k.name] in k.values
+    enc = space.encode_batch(cfgs)
+    np.testing.assert_array_equal(enc, np.stack([space.encode(c)
+                                                 for c in cfgs]))
+    idx = space.index_encode_batch(cfgs)
+    assert space.index_decode_batch(idx) == cfgs
+
+
+def test_fresh_pool_distinct_and_excludes():
+    space = tpu_pod_space(n_chips=256)
+    algo = RandomSearch(space, seed=0)
+    banned = {algo._flat_key(space.sample(np.random.default_rng(9)))
+              for _ in range(5)}
+    idx, coords, flats = algo._fresh_pool(100, exclude=banned)
+    assert len(idx) == len(coords) == len(flats) == 100
+    assert len(set(flats.tolist())) == 100                 # distinct
+    assert not (set(flats.tolist()) & banned)              # excluded
+    np.testing.assert_array_equal(
+        coords, np.stack([space.encode(c)
+                          for c in space.index_decode_batch(idx)]))
+
+
+def test_fresh_pool_partial_on_exhausted_space():
+    tiny = DesignSpace([Knob("a", (1, 2)), Knob("b", (3, 4))])   # 4 configs
+    algo = RandomSearch(tiny, seed=0)
+    idx, coords, flats = algo._fresh_pool(50)              # > space size
+    assert 1 <= len(idx) <= 4
+    assert len(set(flats.tolist())) == len(flats)
+
+
+# ---------------------------------------------------------------------------
+# erf-based normal (no scipy on the ask path)
+# ---------------------------------------------------------------------------
+
+
+def test_norm_cdf_pdf_basics():
+    z = np.linspace(-8, 8, 1001)
+    c = norm_cdf(z)
+    assert np.all(np.diff(c) >= 0)                         # monotone
+    np.testing.assert_allclose(c + norm_cdf(-z), 1.0, atol=2e-7)
+    assert norm_cdf(np.array([0.0]))[0] == pytest.approx(0.5, abs=1e-7)
+    assert norm_pdf(np.array([0.0]))[0] == pytest.approx(
+        1.0 / np.sqrt(2 * np.pi))
+
+
+def test_norm_and_ei_match_scipy_when_available():
+    scipy_stats = pytest.importorskip("scipy.stats")
+    z = np.linspace(-8, 8, 2001)
+    np.testing.assert_allclose(norm_cdf(z), scipy_stats.norm.cdf(z),
+                               atol=2e-7)
+    np.testing.assert_allclose(norm_pdf(z), scipy_stats.norm.pdf(z),
+                               atol=1e-12)
+    rng = np.random.default_rng(0)
+    mu, sig = rng.normal(size=200), rng.random(200) + 0.05
+    best = 0.3
+    zs = (best - mu) / sig
+    ref = (best - mu) * scipy_stats.norm.cdf(zs) + sig * scipy_stats.norm.pdf(zs)
+    np.testing.assert_allclose(expected_improvement(mu, sig, best), ref,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# broadcast non-dominated sort / mask
+# ---------------------------------------------------------------------------
+
+
+def test_fast_nondominated_sort_matches_loop_reference():
+    rng = np.random.default_rng(0)
+    for k in (2, 3):
+        ys = rng.random((60, k))
+        ys[7] = ys[31]                                     # exact tie
+        fast = fast_nondominated_sort(ys)
+        slow = _fast_nondominated_sort_loop(ys)
+        assert len(fast) == len(slow)
+        for a, b in zip(fast, slow):
+            np.testing.assert_array_equal(a, b)
+    assert fast_nondominated_sort(np.zeros((0, 2))) == []
+
+
+def test_nondominated_mask_matches_loop_reference():
+    rng = np.random.default_rng(1)
+    for n in (1, 17, 60, 700):                             # crosses block size
+        ys = rng.random((n, 2))
+        np.testing.assert_array_equal(nondominated_mask(ys),
+                                      _nondominated_mask_loop(ys))
+
+
+# ---------------------------------------------------------------------------
+# scheduler backpressure hooks
+# ---------------------------------------------------------------------------
+
+
+def test_want_lookahead_adds_chunks_for_healthy_clients_only():
+    s = DispatchScheduler([0, 1], policy="pipelined", batch_size=5,
+                          clock=lambda: 0.0)
+    assert s.want() == 20                   # 2 clients x depth 2 x 5
+    assert s.want(lookahead=1) == 30        # +1 chunk per healthy client
+    s.slots[1].quarantined = True
+    assert s.want(lookahead=1) == 15
+
+
+def test_busy_reflects_pending_and_inflight():
+    s = DispatchScheduler([0], policy="eager", batch_size=2,
+                          clock=lambda: 0.0)
+    assert not s.busy()
+    s.submit(TestConfig(0, "a", "s", {"x": 1}))
+    assert s.busy()                         # pending counts
+    s.next_dispatches()
+    assert s.busy()                         # now inflight
+    s.on_result({"config_id": 0, "status": "ok", "client_id": 0,
+                 "metrics": {}})
+    s.submit(TestConfig(1, "a", "s", {"x": 2}))
+    s.next_dispatches()
+    assert s.busy()
+
+
+# ---------------------------------------------------------------------------
+# wire stats -> DispatchScheduler.stats()
+# ---------------------------------------------------------------------------
+
+
+def test_host_transport_counts_wire_bytes_per_client():
+    pair = transport.LoopbackPair(2, codec="binary")
+    host, c0 = pair.host(), pair.client(0)
+    host.push_many(0, [{"cmd": "x", "config_id": i, "v": float(i)}
+                       for i in range(4)])
+    assert len(c0.pull_many(1.0)) == 4
+    c0.push_many([{"config_id": i, "client_id": 0,
+                   "metrics": {"time_s": 1.0}} for i in range(4)])
+    assert len(host.pull_many(1.0)) == 4
+    w = host.wire_summary()
+    assert w["codec"] == "binary"
+    assert w["wire_out_frames"] == 1 and w["wire_in_frames"] == 1
+    assert w["wire_out_mb"] > 0 and w["wire_in_mb"] > 0
+    assert w["wire_per_client"][0]["out_kb"] > 0
+    assert w["wire_per_client"][0]["in_kb"] > 0            # attributed
+
+
+def test_scheduler_stats_merges_wire_summary():
+    s = DispatchScheduler([0], batch_size=1, clock=lambda: 0.0)
+    assert "wire_out_mb" not in s.stats()
+    s.wire_stats_fn = lambda: {"wire_out_mb": 1.5, "wire_in_mb": 0.5,
+                               "codec": "json"}
+    merged = s.stats()
+    assert merged["wire_out_mb"] == 1.5 and merged["codec"] == "json"
+    s.wire_stats_fn = lambda: (_ for _ in ()).throw(RuntimeError("boom"))
+    assert "pending" in s.stats()           # stats never raises
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: async SearchDriver through the JHost loop
+# ---------------------------------------------------------------------------
+
+
+def _toy_build(jc):
+    def build(tc):
+        h = zlib.crc32(repr(jc.cache_key(tc)).encode()) % 7 + 1
+        art = Artifact(flops_per_device=5e12 * h, bytes_per_device=2e10,
+                       wire_bytes_per_device=1e8, collectives={},
+                       arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                       output_bytes=10 ** 6, n_devices=256)
+        return art, {}
+    return build
+
+
+@pytest.mark.parametrize("driver_mode", ["sync", "async"])
+def test_jhost_explore_with_search_driver(driver_mode):
+    space = tpu_pod_space(n_chips=256)
+    jc = JConfig(space, n_chips=256)
+    pair = transport.LoopbackPair(2)
+    for i in range(2):
+        cl = JClient(jc, _toy_build(jc), transport=pair.client(i),
+                     client_id=i, cache_size=64)
+        threading.Thread(target=cl.serve, kwargs=dict(poll_s=0.01),
+                         daemon=True).start()
+    host = JHost(pair.host(), ResultStore(), timeout_s=60.0, poll_s=0.01)
+    algo = BayesOpt(space, seed=0, n_init=8, pool_size=64, strategy="ehvi")
+    with SearchDriver(algo, mode=driver_mode) as search:
+        store = host.explore(search, "toy", "s", 40,
+                             batch_size=5, dispatch="pipelined")
+    host.stop_clients()
+    assert len(store.records) == 40
+    assert all(r.status == "ok" for r in store.records)
+    # every evaluated config was a distinct point of the space
+    ids = {r.config_id for r in store.records}
+    assert len(ids) == 40
+    # wire stats flowed into the scheduler stats
+    s = host.scheduler.stats()
+    assert s["wire_out_mb"] > 0 and s["wire_in_mb"] > 0
