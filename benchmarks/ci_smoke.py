@@ -24,12 +24,21 @@ The baseline is recorded with the identical interleaved statistic:
 ``benchmarks/smoke_baseline.json`` (explicit opt-in; ``results/`` is
 gitignored, so CI checkouts only see the benchmarks/ file).
 
-A second row gates the **searchpath** (this PR's tentpole): the same
+A second row gates the **searchpath** (PR 3's tentpole): the same
 50-config exploration driven by a live BayesOpt(EHVI) searcher, run
 async+incremental and pre-PR-inline back-to-back per rep, gated on the
 median per-pair pre-PR/async wall ratio vs
 ``searchpath_prepr_vs_async_ratio`` in the same baseline file
 (recorded by ``SMOKE_RECORD=1 benchmarks.run searchpath``).
+
+A third row gates the **fleetpath** (PR 4's tentpole): a fixed 50-config
+compile-dominated scenario (8 sw fingerprints, 5 ms injected compile,
+4 clients — see ``fleetpath_smoke_workload``), run with strict compile-
+affinity placement and with affinity off back-to-back per rep, gated on
+the median per-pair rr/affinity wall ratio vs
+``fleetpath_rr_vs_affinity_ratio`` (recorded by ``SMOKE_RECORD=1
+benchmarks.run fleetpath``).  No persistent cache is involved, so every
+rep pays identical cold compiles and the ratio isolates placement.
 
 Env knobs: SMOKE_SAMPLES (default 50), SMOKE_TOLERANCE (default 0.30),
 SMOKE_BASELINE (absolute evals/sec gate override for the evalpath row).
@@ -39,6 +48,8 @@ import os
 import sys
 
 from benchmarks.common import (REPO, evalpath_workload,
+                               fleetpath_smoke_measure,
+                               fleetpath_smoke_workload,
                                searchpath_smoke_measure, smoke_measure)
 
 N = int(os.environ.get("SMOKE_SAMPLES", "50"))
@@ -128,12 +139,44 @@ def searchpath_gate(space, jc, build, baseline) -> int:
     return 0 if ratio >= floor else 1
 
 
+def fleetpath_gate(baseline) -> int:
+    tcs, jc, build = fleetpath_smoke_workload()
+    wall_a, wall_r, ratio, recs = fleetpath_smoke_measure(tcs, jc, build)
+    n = len(tcs)
+    bad = [cid for cid, r in recs.items() if r.status != "ok"]
+    if len(recs) != n or bad:
+        print(f"SMOKE FAIL (fleetpath): {len(recs)}/{n} configs, "
+              f"non-ok: {bad[:5]}")
+        return 1
+    eps = n / wall_a
+    print(f"smoke: {eps:.0f} affinity-fleetpath evals/s over {n} configs "
+          f"({n / wall_r:.0f} round-robin; rr/affinity ratio {ratio:.2f})")
+
+    try:
+        base_ratio = float(baseline["fleetpath_rr_vs_affinity_ratio"])
+        base_eps = float(baseline["fleetpath_affinity_smoke_evals_per_s"])
+    except (KeyError, ValueError):
+        print("smoke: no checked-in fleetpath baseline — passing "
+              "(SMOKE_RECORD=1 benchmarks.run fleetpath records one)")
+        return 0
+
+    print(f"smoke: fleetpath absolute {eps:.0f} vs {base_eps:.0f} baseline "
+          f"evals/s ({eps / base_eps:.2f}x; informational)")
+    floor = base_ratio * (1.0 - TOLERANCE)
+    verdict = "ok" if ratio >= floor else "REGRESSION"
+    print(f"smoke: fleetpath ratio gate {ratio:.2f} vs floor {floor:.2f} "
+          f"(baseline ratio {base_ratio:.2f}, tolerance {TOLERANCE:.0%}) "
+          f"-> {verdict}")
+    return 0 if ratio >= floor else 1
+
+
 def main() -> int:
     space, jc, build = evalpath_workload()
     baseline = _load_baseline()
     rc = evalpath_gate(space, jc, build, baseline)
     rc_search = searchpath_gate(space, jc, build, baseline)
-    return rc or rc_search
+    rc_fleet = fleetpath_gate(baseline)
+    return rc or rc_search or rc_fleet
 
 
 if __name__ == "__main__":

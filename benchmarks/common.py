@@ -35,6 +35,25 @@ Every bench row carries ``us_per_call`` (mean wall per evaluation) and
     incremental path: the curve flattening the ISSUE asks to measure);
   - ``searchpath_smoke_ratio``         — median per-pair pre-PR/async wall
     ratio at smoke size (the CI gate statistic, see ci_smoke.py).
+* ``fleetpath`` rows (PR 4 — compile-dominated 4-client fleet, ~8 unique sw
+  fingerprints, each build sleeps ``FLEET_COMPILE_MS`` ms):
+  - ``fleetpath_rr_wall_ms``           — affinity off / no persistent cache
+    (PR 2 placement): the speedup baseline;
+  - ``fleetpath_affinity_wall_ms``     — ``affinity="strict"`` placement +
+    cold per-client persistent cache (``--cache-dir`` analogue);
+  - ``fleetpath_warm_wall_ms``         — the same sweep re-run against the
+    now-warm persistent cache (restarted-client / repeated-sweep case);
+  - ``fleetpath_speedup``              — rr wall / affinity wall (the PR's
+    ≥2× acceptance number);
+  - ``fleetpath_unique_sw``            — unique sw fingerprints in the
+    config sequence;
+  - ``fleetpath_rr_compiles`` / ``fleetpath_affinity_compiles`` /
+    ``fleetpath_warm_compiles`` — fleet-wide ``n_compiled`` per arm
+    (acceptance: affinity ≤ 1.25× unique_sw; warm == 0);
+  - ``fleetpath_warm_disk_hits``       — persistent-tier hits in the warm
+    arm (≥ unique_sw: every group rode the disk cache);
+  - ``fleetpath_smoke_ratio``          — median per-pair rr/affinity wall
+    ratio at smoke size (the CI gate statistic, see ci_smoke.py).
 """
 from __future__ import annotations
 
@@ -50,6 +69,28 @@ if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 RESULTS = os.path.join(REPO, "results")
+SMOKE_BASELINE_PATH = os.path.join(REPO, "benchmarks", "smoke_baseline.json")
+
+
+def record_smoke_baseline(updates: dict) -> str:
+    """Merge ``updates`` into the checked-in CI smoke baseline.
+
+    Always read-merge-write: recording one bench's baseline must never wipe
+    the keys other benches' gates rely on.  Callers gate the call on
+    ``SMOKE_RECORD`` themselves (refreshing the gate is explicit opt-in).
+    """
+    import json
+
+    try:
+        with open(SMOKE_BASELINE_PATH) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        baseline = {}
+    baseline.update(updates)
+    with open(SMOKE_BASELINE_PATH, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    return SMOKE_BASELINE_PATH
 
 
 def generation_space(arch):
@@ -169,6 +210,132 @@ def evalpath_workload(chips: int = 256):
                                "n_decode_tokens": 100}
 
     return space, jc, build
+
+
+def fleetpath_workload(n_fps: int = 8, compile_cost_s: float = 0.025,
+                       chips: int = 256):
+    """Compile-dominated workload: few unique sw fingerprints, expensive
+    builds (an injected sleep — the TensorRT-engine / jit-compile analogue),
+    millisecond measurements.  This is the regime JExplore targets on real
+    Jetson fleets; ``bench_fleetpath``'s affinity/persistent-cache arms
+    measure how well the scheduler amortizes it.  Returns
+    (space, jconfig, build_fn).
+    """
+    from repro.core import JConfig
+    from repro.core.space import DesignSpace, KIND_HW, KIND_SW, Knob
+    from repro.roofline import hw as hwmod
+    from repro.roofline.analysis import Artifact
+
+    def art(f):
+        return Artifact(flops_per_device=f, bytes_per_device=2e10,
+                        wire_bytes_per_device=1e8, collectives={},
+                        arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                        output_bytes=10 ** 6, n_devices=chips)
+
+    space = DesignSpace([
+        Knob("clock_scale", hwmod.CLOCK_LADDER, KIND_HW),
+        Knob("hbm_scale", hwmod.HBM_LADDER, KIND_HW),
+        Knob("ici_scale", hwmod.ICI_LADDER, KIND_HW),
+        # one sw knob with n_fps values == n_fps unique compile groups
+        Knob("attn_block_q", tuple(64 * (i + 1) for i in range(n_fps)),
+             KIND_SW),
+    ])
+    jc = JConfig(space, n_chips=chips)
+
+    def build(tc):
+        if compile_cost_s:
+            time.sleep(compile_cost_s)
+        h = zlib.crc32(repr(jc.cache_key(tc)).encode()) % 7 + 1
+        return art(5e12 * h), {"decode_artifact": art(1e11 * h),
+                               "n_decode_tokens": 100}
+
+    return space, jc, build
+
+
+def run_fleetpath(tcs, jc, build, *, clients: int = 4,
+                  affinity: str = "strict", cache_root: str = None,
+                  batch_size: int = 12, reps: int = 1,
+                  speculate_frac: float = None, timeout_s: float = 120.0):
+    """Drive the full host loop with compile-affinity placement and an
+    optional per-client persistent artifact cache
+    (``cache_root/client<i>``, each board owning its own disk).
+
+    Same fixed-search replay as ``run_hostpath`` (config_id i ↔ tcs[i]),
+    plus fleet-wide compile accounting.  Returns (best_wall_s,
+    {config_id: record}, fleet_n_compiled, [per-client cache_info]) with
+    the compile counts taken from the best rep.
+    """
+    import threading
+    import time as _time
+
+    from repro.core import JClient, JHost, ResultStore, transport
+
+    best = None
+    for _ in range(reps):
+        pair = transport.LoopbackPair(clients)
+        cls = []
+        for i in range(clients):
+            cdir = (None if cache_root is None
+                    else os.path.join(cache_root, f"client{i}"))
+            cl = JClient(jc, build, transport=pair.client(i), client_id=i,
+                         cache_size=256, cache_dir=cdir)
+            cls.append(cl)
+            threading.Thread(target=cl.serve, kwargs=dict(poll_s=0.005),
+                             daemon=True).start()
+        host = JHost(pair.host(), ResultStore(), timeout_s=timeout_s,
+                     poll_s=0.002)
+        search = _FixedSearch([tc.knobs for tc in tcs])
+        fp_fn = (jc.cache_key if affinity != "off"
+                 or speculate_frac is not None else None)
+        t0 = _time.perf_counter()
+        store = host.explore(search, tcs[0].arch, tcs[0].shape, len(tcs),
+                             batch_size=batch_size, dispatch="pipelined",
+                             affinity=affinity, fingerprint_fn=fp_fn,
+                             speculate_frac=speculate_frac)
+        wall = _time.perf_counter() - t0
+        host.stop_clients()
+        recs = {r.config_id: r for r in store.records}
+        if best is None or wall < best[0]:
+            best = (wall, recs, sum(c.n_compiled for c in cls),
+                    [c.cache_info() for c in cls])
+    return best
+
+
+def fleetpath_smoke_workload():
+    """The fixed smoke-sized fleetpath scenario: ci_smoke and the
+    SMOKE_RECORD baseline path must measure the identical shape.  Returns
+    (tcs, jc, build): 50 configs, 8 fingerprints, 5 ms compile."""
+    import numpy as np
+
+    from repro.core import TestConfig
+
+    space, jc, build = fleetpath_workload(n_fps=8, compile_cost_s=0.005)
+    rng = np.random.default_rng(0)
+    tcs = [TestConfig(i, "toy", "generate", space.sample(rng))
+           for i in range(50)]
+    return tcs, jc, build
+
+
+def fleetpath_smoke_measure(tcs, jc, build, reps: int = 5):
+    """Interleaved affinity vs round-robin fleetpath pairs.
+
+    No persistent cache, so every rep pays the same cold compiles; the
+    per-pair rr/affinity wall ratio is the noise-cancelling CI gate
+    statistic (same rationale as ``smoke_measure``).  Returns
+    (median_affinity_wall_s, median_rr_wall_s, median_pair_ratio,
+    affinity_records).
+    """
+    awalls, rwalls, ratios = [], [], []
+    recs = None
+    for _ in range(reps):
+        wa, recs, _, _ = run_fleetpath(tcs, jc, build, affinity="strict",
+                                       batch_size=6, reps=1)
+        wr, _, _, _ = run_fleetpath(tcs, jc, build, affinity="off",
+                                    batch_size=6, reps=1)
+        awalls.append(wa)
+        rwalls.append(wr)
+        ratios.append(wr / wa)
+    return _median(awalls), _median(rwalls), _median(ratios), recs
 
 
 def run_evalpath(tcs, jc, build, batched: bool, reps: int = 3):

@@ -12,6 +12,36 @@ network staying resident on a Jetson while only clocks change.  The cache is
 a true LRU: a hit refreshes the key, so hot sw-points survive long sweeps
 that touch more unique fingerprints than ``cache_size``.
 
+Persistent artifact cache (``cache_dir``)
+-----------------------------------------
+With ``cache_dir`` set, the in-memory LRU becomes the *hot tier* of a
+two-tier cache: every freshly built ``BuildResult`` is also pickled to disk,
+content-addressed, and an in-memory miss tries the disk tier before calling
+``build_fn`` — the analogue of an on-disk TensorRT engine cache, so a
+restarted client (or a repeated sweep) skips the compile entirely for every
+fingerprint it has ever built.
+
+Layout: ``<cache_dir>/<hh>/<hash>.pkl`` where ``hash`` is the SHA-256 of
+``repr((JConfig.identity(), cache_key))`` and ``hh`` its first two hex
+chars (keeps directories small on big sweeps).  Each file holds
+``{"v": _DISK_CACHE_VERSION, "key": repr(cache_key), "built": BuildResult}``
+written atomically (tmp file + ``os.replace``), so concurrent clients may
+share a directory — last writer wins, and readers never see a torn file.
+
+Invalidation rules: the address covers everything that determines the
+artifact — the jconfig identity (design-space knob names/values/kinds +
+``n_chips``) and the full ``cache_key`` (arch, shape, sw-knob values) — so
+changing any of those naturally misses.  What the address *cannot* see is
+the body of ``build_fn`` itself: if the workload builder changes
+behaviourally, bump ``_DISK_CACHE_VERSION`` or delete the directory.  A
+corrupt/unreadable/version-mismatched file is treated as a miss and
+overwritten; entries are never aged out automatically.
+
+``cache_info()`` reports both tiers, and ``serve`` attaches the summary to
+every chunk reply (one ``cache_info`` sidecar per result frame) — the
+host's ``DispatchScheduler`` uses it to keep its per-client cache shadow
+honest for compile-affinity placement.
+
 Batched fast path (group-by-compile)
 ------------------------------------
 ``evaluate_batch`` is the throughput-oriented entry point.  It groups the
@@ -33,6 +63,10 @@ sweep and come back as one result frame.
 """
 from __future__ import annotations
 
+import hashlib
+import os
+import pickle
+import tempfile
 import time
 import traceback
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -47,6 +81,10 @@ from repro.roofline.analysis import Artifact
 
 BuildResult = Tuple[Artifact, Dict]
 
+# bump when BuildResult semantics change behaviourally for the same address
+# (the content hash cannot see the body of build_fn)
+_DISK_CACHE_VERSION = 1
+
 
 class JClient:
     def __init__(self, jconfig: JConfig,
@@ -54,7 +92,8 @@ class JClient:
                  measures: Sequence[JMeasure] = DEFAULT_MEASURES,
                  transport: Optional[ClientTransport] = None,
                  client_id: int = 0,
-                 cache_size: int = 64):
+                 cache_size: int = 64,
+                 cache_dir: Optional[str] = None):
         self.jconfig = jconfig
         self.build_fn = build_fn
         self.measures = tuple(measures)
@@ -65,18 +104,74 @@ class JClient:
         self._cache_hits = 0
         self._cache_misses = 0
         self._cache_evictions = 0
+        self.cache_dir = cache_dir
+        self._disk_hits = 0
+        self._disk_misses = 0
+        self._disk_stores = 0
         self.n_evaluated = 0
         self.n_compiled = 0
+        if cache_dir is not None:
+            os.makedirs(cache_dir, exist_ok=True)
 
-    # -- artifact cache (LRU keyed by sw fingerprint) -------------------------
+    # -- persistent tier (content-addressed pickles, see module docstring) ----
+    def _disk_path(self, key: tuple) -> str:
+        h = hashlib.sha256(
+            repr((self.jconfig.identity(), key)).encode("utf-8")).hexdigest()
+        return os.path.join(self.cache_dir, h[:2], h + ".pkl")
+
+    def _disk_load(self, key: tuple) -> Optional[BuildResult]:
+        try:
+            with open(self._disk_path(key), "rb") as f:
+                payload = pickle.load(f)
+            if (payload.get("v") == _DISK_CACHE_VERSION
+                    and payload.get("key") == repr(key)):
+                return payload["built"]
+        except Exception:
+            pass          # missing / torn / stale-format file == miss
+        return None
+
+    def _disk_store(self, key: tuple, built: BuildResult) -> None:
+        """Best-effort atomic write; an unpicklable artifact (live device
+        buffers, etc.) simply stays memory-only.  The tmp file name comes
+        from mkstemp, so concurrent writers — including client threads
+        sharing one process — can never interleave into one file."""
+        path = self._disk_path(key)
+        tmp = None
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump({"v": _DISK_CACHE_VERSION, "key": repr(key),
+                             "built": built}, f)
+            os.replace(tmp, path)
+            self._disk_stores += 1
+        except Exception:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    # -- artifact cache (LRU hot tier keyed by sw fingerprint) ----------------
     def _artifact(self, key: tuple, tc: TestConfig) -> BuildResult:
         if key in self._cache:
             self._cache[key] = self._cache.pop(key)  # refresh: true LRU
             self._cache_hits += 1
             return self._cache[key]
         self._cache_misses += 1
-        built = self.build_fn(tc)
-        self.n_compiled += 1
+        built = None
+        if self.cache_dir is not None:
+            built = self._disk_load(key)
+            if built is not None:
+                self._disk_hits += 1
+            else:
+                self._disk_misses += 1
+        if built is None:
+            built = self.build_fn(tc)
+            self.n_compiled += 1
+            if self.cache_dir is not None:
+                self._disk_store(key, built)
         if len(self._cache) >= self._cache_size:
             self._cache.pop(next(iter(self._cache)))  # least-recently used
             self._cache_evictions += 1
@@ -84,10 +179,15 @@ class JClient:
         return built
 
     def cache_info(self) -> Dict[str, int]:
-        """functools-style counters for the artifact LRU."""
-        return {"hits": self._cache_hits, "misses": self._cache_misses,
+        """functools-style counters for the artifact cache, both tiers."""
+        info = {"hits": self._cache_hits, "misses": self._cache_misses,
                 "evictions": self._cache_evictions,
                 "currsize": len(self._cache), "maxsize": self._cache_size}
+        if self.cache_dir is not None:
+            info.update({"disk_hits": self._disk_hits,
+                         "disk_misses": self._disk_misses,
+                         "disk_stores": self._disk_stores})
+        return info
 
     # -- single evaluation -------------------------------------------------
     def evaluate(self, tc: TestConfig) -> dict:
@@ -214,11 +314,14 @@ class JClient:
                 tcs = [TestConfig.from_wire(d)
                        for f in frames for d in unframe_batch(f)]
                 # slim wire results: the host rehydrates knobs/arch/shape
-                # from its in-flight table, so don't echo them back
-                self.transport.push_many([
-                    {k: v for k, v in r.items()
-                     if k not in ("knobs", "arch", "shape")}
-                    for r in self.evaluate_batch(tcs)])
+                # from its in-flight table, so don't echo them back.  The
+                # frame carries one cache_info sidecar — the host scheduler
+                # resyncs its per-client cache shadow from it
+                self.transport.push_many(
+                    [{k: v for k, v in r.items()
+                      if k not in ("knobs", "arch", "shape")}
+                     for r in self.evaluate_batch(tcs)],
+                    extra={"cache_info": self.cache_info()})
                 served += len(tcs)
                 for m in scalars:   # scalar configs drained behind the frames
                     self.transport.push(self.evaluate(TestConfig.from_wire(m)))

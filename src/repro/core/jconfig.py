@@ -95,3 +95,13 @@ class JConfig:
         # knob names are unique, so name-sorted pairs == sorted pairs
         sw = tuple((n, knobs[n]) for n in self._sw_names if n in knobs)
         return (tc.arch, tc.shape, sw)
+
+    def identity(self) -> Tuple:
+        """Stable fingerprint of this configuration manager itself — the
+        design space (names, value sets, kinds) and the chip count.  The
+        persistent artifact cache addresses entries by ``(identity(),
+        cache_key(tc))``, so artifacts built under a different space or
+        fleet shape can never be served by mistake."""
+        return ("jconfig-v1", self.n_chips,
+                tuple((k.name, k.kind, tuple(repr(v) for v in k.values))
+                      for k in self.space))

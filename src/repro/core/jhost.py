@@ -16,7 +16,13 @@ the transport, the scheduler, and the ResultStore:
   * straggler mitigation / fault tolerance — every chunk carries a deadline;
     on timeout the late client is quarantined and surviving configs are
     re-queued (up to ``max_retries`` per config), waiting in the pending
-    queue if no client is free at sweep time;
+    queue if no client is free at sweep time; with ``speculate_frac`` a
+    nearly-expired chunk is mirrored to a second client first (first answer
+    wins) so a straggler costs one speculation, not a full deadline;
+  * compile-affinity placement — with ``affinity`` + ``fingerprint_fn``
+    (normally ``JConfig.cache_key``) the scheduler tracks which sw
+    fingerprints each client holds compiled and routes same-fingerprint
+    chunks back to that client (see ``repro.core.scheduler``);
   * result saving — every result lands in a ResultStore (CSV streaming);
   * async search overlap — when ``search`` is a ``SearchDriver`` (it
     exposes ``poll_ask``/``note_demand``), the loop feeds the scheduler's
@@ -63,13 +69,21 @@ class JHost:
                 batch_size: Optional[int] = None,
                 dispatch: str = "eager",
                 chunk_budget_ms: Optional[float] = None,
+                affinity: str = "off",
+                fingerprint_fn=None,
+                client_cache_size: int = 64,
+                speculate_frac: Optional[float] = None,
+                pipeline_depth: Optional[int] = None,
                 scheduler: Optional[DispatchScheduler] = None) -> ResultStore:
         sched = scheduler if scheduler is not None else DispatchScheduler(
             self.transport.client_ids(), policy=dispatch,
             timeout_s=self.timeout_s, max_retries=self.max_retries,
             batch_size=batch_size,
             chunk_budget_s=(None if chunk_budget_ms is None
-                            else chunk_budget_ms / 1e3))
+                            else chunk_budget_ms / 1e3),
+            affinity=affinity, fingerprint_fn=fingerprint_fn,
+            client_cache_size=client_cache_size,
+            speculate_frac=speculate_frac, pipeline_depth=pipeline_depth)
         self.scheduler = sched
         self.quarantined = sched.quarantined   # shared set, stays live
         sched.wire_stats_fn = getattr(self.transport, "wire_summary", None)

@@ -29,7 +29,13 @@ class ResultRecord:
 
     @staticmethod
     def from_wire(d: dict) -> "ResultRecord":
-        return ResultRecord(**d)
+        # drop frame sidecar fields (e.g. cache_info) and anything a newer
+        # client may attach: the record schema is the host's contract
+        return ResultRecord(**{k: v for k, v in d.items()
+                               if k in _RECORD_FIELDS})
+
+
+_RECORD_FIELDS = frozenset(f.name for f in dataclasses.fields(ResultRecord))
 
 
 def nondominated_mask(points: np.ndarray) -> np.ndarray:

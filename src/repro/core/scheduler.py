@@ -10,20 +10,24 @@ machines:
   owner has not answered *itself* yet (a late straggler answering some of a
   chunk's configs records their results but does not free the owner early).
 * ``ClientSlot`` — per-client pipeline state: the FIFO of chunk_ids queued
-  on that client, an EWMA of observed per-config wall time, and quarantine.
+  on that client, an EWMA of observed per-config wall time, quarantine, and
+  a ``CacheShadow`` of the sw fingerprints believed resident in that
+  client's artifact LRU.
 
 Dispatch policies
 -----------------
 ``eager``     — depth-1: a client receives its next chunk only after fully
   answering its current one (PR 1's batched barrier; ``batch_size=None``
   with this policy is the seed's scalar protocol).
-``pipelined`` — depth-2 double-buffering: the scheduler keeps every healthy
-  client's config queue two chunks deep, so the next chunk is already
-  sitting in the client's transport queue when it finishes the current one —
-  the client never idles between its result push and next pull.  Per-chunk
+``pipelined`` — depth-N buffering (default 2): the scheduler keeps every
+  healthy client's config queue ``pipeline_depth`` chunks deep, so the next
+  chunk is already sitting in the client's transport queue when it finishes
+  the current one — the client never idles between its result push and next
+  pull.  Depth 2 is the classic double-buffer; deeper pipelines hide very
+  high-latency links (one chunk in flight per link round-trip).  Per-chunk
   deadlines stack (a queued chunk's clock starts where its predecessor's
-  budget ends) and straggler requeue fails over *all* chunks queued on a
-  quarantined client.
+  budget ends — at any depth) and straggler requeue fails over *all* chunks
+  queued on a quarantined client.
 
 Adaptive chunk sizing
 ---------------------
@@ -36,6 +40,40 @@ counted), and the next chunk dispatched to that client is sized
 jittery clients get smaller ones, and no client holds a chunk much longer
 than the budget — which bounds straggler-detection latency too.
 
+Compile-affinity placement
+--------------------------
+On a real fleet the dominant cost is artifact *builds* (TensorRT engines /
+jit compiles: seconds), not measurements (milliseconds).  With a
+``fingerprint_fn`` (normally ``JConfig.cache_key``) the scheduler makes
+artifact placement a first-class input: every slot carries a ``CacheShadow``
+— an LRU-faithful model of the client's artifact cache, marked optimistically
+at dispatch, confirmed from result messages' ``cached`` flags, and resynced
+from the ``cache_info`` summary a client attaches to each chunk reply — and
+``next_dispatches`` assembles chunks from per-fingerprint buckets of the
+pending queue so each dispatch is at most a few compile groups:
+
+* ``affinity="off"``    — PR 2 behaviour: FIFO chunks, fixed slot order.
+* ``affinity="prefer"`` — a slot takes groups already resident in its
+  shadow first (largest first — tightest compile packing), then unclaimed
+  groups (becoming their home), and steals a group resident on another
+  healthy client only when it would otherwise sit completely idle.
+* ``affinity="strict"`` — never steals: a group resident on a healthy
+  client waits for that client (its shadow is cleared on quarantine, so a
+  dead home never strands work).
+
+Speculative re-dispatch
+-----------------------
+With ``speculate_frac`` set, a running head chunk that has consumed that
+fraction of its deadline budget without completing is mirrored to a second
+client — chosen by shadow affinity, falling back to least-loaded.  First
+answer wins: results are deduped by the existing first-answer-only inflight
+table, the losing twin chunk is cancelled host-side (removed from its
+slot's queue; its late answers ride the existing duplicate path), and a
+quarantined primary hands its configs to the live mirror instead of
+re-queueing them.  The losing client may still be computing the cancelled
+chunk, so its next EWMA observation can read slightly slow — the price of
+never waiting out a full deadline on a straggler.
+
 The scheduler is transport-free and clock-injectable: the host pushes the
 chunks ``next_dispatches()`` returns, feeds every pulled result to
 ``on_result()``, and calls ``expire()`` each poll; unit tests drive the same
@@ -46,19 +84,89 @@ from __future__ import annotations
 import itertools
 import time
 from collections import deque
-from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
-                    Tuple)
+from typing import (Any, Callable, Deque, Dict, Hashable, List, Optional,
+                    Sequence, Set, Tuple)
 
 from repro.core.jconfig import TestConfig
 
 POLICIES = ("eager", "pipelined")
+AFFINITIES = ("off", "prefer", "strict")
+
+
+class CacheShadow:
+    """Host-side model of one client's artifact LRU.
+
+    Mirrors ``JClient._artifact`` exactly: a hit refreshes the key's
+    recency; a miss inserts it, evicting the least-recently-used entry
+    first when the cache is already at capacity.  Each entry records
+    whether it is *confirmed* (learned from a result message: the client
+    really holds it) or an *optimistic* dispatch mark (the client will hold
+    it once it evaluates the chunk — unless the chunk fails).  ``resync``
+    folds in the authoritative ``cache_info`` counters a client attaches
+    to its chunk replies: when the model holds more entries than the
+    client reports, the newest unconfirmed marks are dropped first, and
+    only then confirmed entries from the LRU end.
+    """
+
+    __slots__ = ("capacity", "_d", "evictions")
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = capacity
+        self._d: Dict[Hashable, bool] = {}   # fp -> confirmed; ins. order
+        self.evictions = 0                   # == LRU order
+
+    def __contains__(self, fp: Hashable) -> bool:
+        return fp in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def keys(self) -> List[Hashable]:
+        """Resident fingerprints, least-recently-used first."""
+        return list(self._d)
+
+    def touch(self, fp: Hashable, confirmed: bool = True) -> bool:
+        """Mark ``fp`` used; returns True when it was already resident."""
+        if fp in self._d:
+            # refresh recency (true LRU); confirmation is sticky
+            self._d[fp] = self._d.pop(fp) or confirmed
+            return True
+        if len(self._d) >= self.capacity:            # evict before insert,
+            self._d.pop(next(iter(self._d)))         # like JClient._artifact
+            self.evictions += 1
+        self._d[fp] = confirmed
+        return False
+
+    def resync(self, currsize: Optional[int], maxsize: Optional[int]) -> None:
+        if maxsize is not None and maxsize > 0:
+            self.capacity = int(maxsize)
+        if currsize is None:
+            return
+        excess = len(self._d) - max(int(currsize), 0)
+        if excess <= 0:
+            return
+        # the model drifted ahead of the client: unconfirmed optimistic
+        # marks (e.g. for a chunk that failed) are the suspects — drop the
+        # newest of those first, never a confirmed-resident entry before
+        # every optimistic one is gone
+        for fp in [f for f, ok in reversed(self._d.items()) if not ok]:
+            if excess <= 0:
+                break
+            del self._d[fp]
+            excess -= 1
+        while excess > 0:
+            self._d.pop(next(iter(self._d)))         # confirmed: LRU-first
+            excess -= 1
+
+    def clear(self) -> None:
+        self._d.clear()
 
 
 class Chunk:
     """One dispatched chunk: owner, deadline, and unanswered config_ids."""
 
     __slots__ = ("chunk_id", "client", "deadline", "awaiting", "size",
-                 "started_at", "started_seq")
+                 "started_at", "started_seq", "fps", "mirror_id", "mirror_of")
 
     def __init__(self, chunk_id: int, client: int, deadline: float,
                  awaiting: Set[int], started_at: Optional[float]):
@@ -74,20 +182,31 @@ class Chunk:
         # which result batch (pull sequence) marked it started, if any —
         # used to detect client-side chunk coalescing (see _complete_chunk)
         self.started_seq: Optional[int] = None
+        # ordered unique sw fingerprints of the chunk's configs (known only
+        # when the scheduler has a fingerprint_fn)
+        self.fps: List[Hashable] = []
+        # speculative-twin links: a primary points at its mirror and vice
+        # versa; both awaiting sets shrink in lockstep (first answer wins)
+        self.mirror_id: Optional[int] = None    # set on the primary
+        self.mirror_of: Optional[int] = None    # set on the mirror
 
 
 class ClientSlot:
-    """Per-client pipeline: queued chunks, wall-time EWMA, quarantine."""
+    """Per-client pipeline: queued chunks, wall-time EWMA, quarantine, and
+    the shadow of the client's artifact cache."""
 
     __slots__ = ("client_id", "depth_target", "chunks", "ewma_per_cfg_s",
-                 "quarantined", "ewma_prev", "obs_start", "obs_configs")
+                 "quarantined", "ewma_prev", "obs_start", "obs_configs",
+                 "shadow")
 
-    def __init__(self, client_id: int, depth_target: int):
+    def __init__(self, client_id: int, depth_target: int,
+                 cache_size: int = 64):
         self.client_id = client_id
         self.depth_target = depth_target
         self.chunks: List[int] = []         # FIFO of chunk_ids
         self.ewma_per_cfg_s: Optional[float] = None
         self.quarantined = False
+        self.shadow = CacheShadow(cache_size)
         # last EWMA observation, kept revisable: when the client coalesced
         # queued chunks into one evaluate_batch, the successor chunk
         # completes in the same result frame with ~zero measured duration —
@@ -113,10 +232,30 @@ class DispatchScheduler:
                  min_chunk: int = 1,
                  max_chunk: int = 512,
                  ewma_alpha: float = 0.25,
+                 affinity: str = "off",
+                 fingerprint_fn: Optional[Callable[[TestConfig],
+                                                   Hashable]] = None,
+                 client_cache_size: int = 64,
+                 speculate_frac: Optional[float] = None,
+                 pipeline_depth: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
-        depth = 2 if policy == "pipelined" else 1
+        if affinity not in AFFINITIES:
+            raise ValueError(
+                f"affinity must be one of {AFFINITIES}, got {affinity!r}")
+        if affinity != "off" and fingerprint_fn is None:
+            raise ValueError("affinity placement needs a fingerprint_fn "
+                             "(e.g. JConfig.cache_key)")
+        if speculate_frac is not None and not 0.0 < speculate_frac <= 1.0:
+            raise ValueError(f"speculate_frac must be in (0, 1], "
+                             f"got {speculate_frac!r}")
+        if pipeline_depth is not None:
+            depth = int(pipeline_depth)
+            if depth < 1:
+                raise ValueError(f"pipeline_depth must be >= 1, got {depth}")
+        else:
+            depth = 2 if policy == "pipelined" else 1
         self.policy = policy
         self.timeout_s = timeout_s
         self.max_retries = max_retries
@@ -124,20 +263,31 @@ class DispatchScheduler:
         self.min_chunk = min_chunk
         self.max_chunk = max_chunk
         self.ewma_alpha = ewma_alpha
+        self.affinity = affinity
+        self.fingerprint_fn = fingerprint_fn
+        self.speculate_frac = speculate_frac
         self.clock = clock
         # before any EWMA exists: the static batch_size, or a modest seed
         # chunk when only a budget was given (it adapts from there)
         self.base_chunk = max(int(batch_size or (8 if chunk_budget_s else 1)), 1)
         self.slots: Dict[int, ClientSlot] = {
-            c: ClientSlot(c, depth) for c in client_ids}
+            c: ClientSlot(c, depth, client_cache_size) for c in client_ids}
         self.pending: Deque[Tuple[TestConfig, int]] = deque()
         self.inflight: Dict[int, dict] = {}   # config_id -> {tc, chunk, retries}
         self.chunks: Dict[int, Chunk] = {}
         self.quarantined: Set[int] = set()
         self._chunk_ids = itertools.count()
         self._pull_seq = 0
+        self._fp: Dict[int, Hashable] = {}    # config_id -> sw fingerprint
         self.n_chunks_dispatched = 0
         self.n_configs_dispatched = 0
+        self.n_fp_chunks = 0        # chunks whose fingerprints were known
+        self.n_affine_chunks = 0    # ... placed on a client already holding
+        #                             their leading fingerprint
+        self.n_speculated = 0       # mirror chunks dispatched
+        self.n_spec_wins_primary = 0
+        self.n_spec_wins_mirror = 0
+        self.n_spec_cancelled = 0   # losing twins cancelled host-side
         # optional wire-stats source (the host attaches its transport's
         # ``wire_summary``); merged into stats() — the scheduler itself
         # stays transport-free
@@ -170,26 +320,122 @@ class DispatchScheduler:
         return bool(self.inflight) or bool(self.pending)
 
     def submit(self, tc: TestConfig) -> None:
+        if self.fingerprint_fn is not None:
+            self._fp[tc.config_id] = self.fingerprint_fn(tc)
         self.pending.append((tc, self.max_retries))
 
     # -- dispatch -------------------------------------------------------------
     def next_dispatches(self) -> List[Tuple[int, List[TestConfig]]]:
-        """Chunks ready to ship: (client_id, configs), pipeline-fair."""
+        """Chunks ready to ship: (client_id, configs), pipeline-fair.
+
+        With affinity on, slots fill least-loaded-first from per-fingerprint
+        buckets of the pending queue (see ``_take_affine``); speculative
+        mirrors of nearly-expired chunks are emitted first, so a straggler's
+        insurance rides the same push the fresh work does.
+        """
         out: List[Tuple[int, List[TestConfig]]] = []
+        if self.speculate_frac is not None:
+            out.extend(self._speculative_dispatches())
+        if not self.pending or not any(
+                s.open_chunks() for s in self.slots.values()):
+            return out                # steady state: skip the bucketing work
+        if self.affinity == "off":
+            progress = True
+            while self.pending and progress:
+                progress = False
+                # one chunk per slot per pass keeps clients evenly loaded
+                for slot in self.slots.values():
+                    if not self.pending:
+                        break
+                    if slot.open_chunks() == 0:
+                        continue
+                    size = min(self.chunk_size_for(slot), len(self.pending))
+                    items = [self.pending.popleft() for _ in range(size)]
+                    out.append((slot.client_id, self._dispatch(slot, items)))
+                    progress = True
+            return out
+        # affinity: bucket the pending queue by fingerprint ONCE per call
+        # (arrival order preserved per bucket and, via seq, overall), then
+        # let every slot-pass consume from the shared buckets
+        groups: Dict[Hashable, Deque[Tuple[int, Tuple[TestConfig, int]]]] = {}
+        for seq, item in enumerate(self.pending):
+            fp = self._fp.get(item[0].config_id)
+            if fp not in groups:
+                groups[fp] = deque()
+            groups[fp].append((seq, item))
+        n_left = len(self.pending)
         progress = True
-        while self.pending and progress:
+        while n_left and progress:
             progress = False
-            # one chunk per slot per pass keeps clients evenly loaded
-            for slot in self.slots.values():
-                if not self.pending:
+            # least-loaded first so the non-affine fallback balances
+            for slot in sorted(self.slots.values(),
+                               key=lambda s: (len(s.chunks), s.client_id)):
+                if n_left == 0:
                     break
                 if slot.open_chunks() == 0:
                     continue
-                size = min(self.chunk_size_for(slot), len(self.pending))
-                items = [self.pending.popleft() for _ in range(size)]
+                size = min(self.chunk_size_for(slot), n_left)
+                items = self._take_affine(slot, size, groups)
+                if not items:
+                    continue      # strict: this slot's work lives elsewhere
+                n_left -= len(items)
                 out.append((slot.client_id, self._dispatch(slot, items)))
                 progress = True
+        if n_left != len(self.pending):
+            left = sorted((e for q in groups.values() for e in q),
+                          key=lambda e: e[0])
+            self.pending = deque(item for _, item in left)
         return out
+
+    def _take_affine(self, slot: ClientSlot, size: int,
+                     groups: Dict[Hashable, Deque]) -> List[Tuple[TestConfig,
+                                                                  int]]:
+        """Up to ``size`` items for ``slot``, consumed from the shared
+        per-fingerprint buckets.
+
+        Groups are ranked: resident in this slot's shadow first (largest
+        first — tightest compile packing), then groups resident on no
+        healthy client (this slot becomes their home), then — only in
+        ``prefer`` mode and only when the slot is completely idle — groups
+        resident on another healthy client.  Whole groups are taken
+        head-first until the chunk is full, so a dispatch is at most a few
+        compile groups — and at most ONE of them not yet compiled anywhere:
+        padding a chunk with the head of a second fresh group would claim
+        it for this client, skewing group ownership across the fleet and
+        serializing its compiles here; resident groups, by contrast, are
+        free riders.
+        """
+        here: List[Hashable] = []
+        unclaimed: List[Hashable] = []
+        elsewhere: List[Hashable] = []
+        for fp, q in groups.items():
+            if not q:
+                continue
+            if fp is not None and fp in slot.shadow:
+                here.append(fp)
+            elif fp is not None and any(
+                    fp in s.shadow for s in self.slots.values()
+                    if s is not slot and not s.quarantined):
+                elsewhere.append(fp)
+            else:
+                unclaimed.append(fp)     # no affinity signal: first taker
+        here.sort(key=lambda f: -len(groups[f]))
+        ranked = here + unclaimed
+        if self.affinity == "prefer" and not slot.chunks:
+            ranked += elsewhere          # steal rather than idle
+        taken: List[Tuple[TestConfig, int]] = []
+        new_group_taken = False
+        for fp in ranked:
+            if len(taken) >= size:
+                break
+            if not (fp is not None and fp in slot.shadow):
+                if new_group_taken:      # one fresh compile group per chunk
+                    continue
+                new_group_taken = True
+            q = groups[fp]
+            while q and len(taken) < size:
+                taken.append(q.popleft()[1])
+        return taken
 
     def _dispatch(self, slot: ClientSlot,
                   items: List[Tuple[TestConfig, int]]) -> List[TestConfig]:
@@ -207,6 +453,22 @@ class DispatchScheduler:
                       deadline=base + self.timeout_s * len(items),
                       awaiting={tc.config_id for tc, _ in items},
                       started_at=started)
+        if self.fingerprint_fn is not None:
+            seen: Set[Hashable] = set()
+            for tc, _ in items:
+                fp = self._fp.get(tc.config_id)
+                if fp is not None and fp not in seen:
+                    seen.add(fp)
+                    chunk.fps.append(fp)
+            if chunk.fps:
+                self.n_fp_chunks += 1
+                if chunk.fps[0] in slot.shadow:
+                    self.n_affine_chunks += 1
+                # optimistic: the client will hold these once it evaluates
+                # the chunk (confirmed/corrected by result `cached` flags
+                # and the reply's cache_info resync)
+                for fp in chunk.fps:
+                    slot.shadow.touch(fp, confirmed=False)
         self.chunks[chunk_id] = chunk
         slot.chunks.append(chunk_id)
         for tc, retries in items:
@@ -215,6 +477,94 @@ class DispatchScheduler:
         self.n_chunks_dispatched += 1
         self.n_configs_dispatched += len(items)
         return [tc for tc, _ in items]
+
+    # -- speculation ----------------------------------------------------------
+    def _speculative_dispatches(self) -> List[Tuple[int, List[TestConfig]]]:
+        """Mirror running head chunks that burned ``speculate_frac`` of their
+        deadline budget onto a second client (shadow-affine, else least
+        loaded).  First answer wins; see ``_cancel_twin``."""
+        now = self.clock()
+        out: List[Tuple[int, List[TestConfig]]] = []
+        for slot in self.slots.values():
+            if slot.quarantined or not slot.chunks:
+                continue
+            head = self.chunks[slot.chunks[0]]
+            if (head.mirror_id is not None or head.mirror_of is not None
+                    or head.started_at is None or not head.awaiting):
+                continue
+            budget = head.deadline - head.started_at
+            if budget <= 0 or (now - head.started_at) < \
+                    self.speculate_frac * budget:
+                continue
+            target = self._mirror_target(slot, head)
+            if target is None:
+                continue
+            # mirror only what is still unanswered AND in flight: a cid the
+            # owner still awaits but a late straggler already answered is
+            # not re-sent, so it must not be awaited from the mirror either
+            # (it could never answer it — the chunk would hang forever)
+            tcs = [self.inflight[c]["tc"] for c in sorted(head.awaiting)
+                   if c in self.inflight]
+            if not tcs:
+                continue
+            mirror_id = next(self._chunk_ids)
+            if target.chunks:
+                base = max(now, self.chunks[target.chunks[-1]].deadline)
+                started = None
+            else:
+                base = now
+                started = now
+            mirror = Chunk(mirror_id, target.client_id,
+                           deadline=base + self.timeout_s * len(tcs),
+                           awaiting={tc.config_id for tc in tcs},
+                           started_at=started)
+            mirror.mirror_of = head.chunk_id
+            mirror.fps = list(head.fps)
+            head.mirror_id = mirror_id
+            self.chunks[mirror_id] = mirror
+            target.chunks.append(mirror_id)
+            for fp in mirror.fps:
+                target.shadow.touch(fp, confirmed=False)
+            self.n_speculated += 1
+            out.append((target.client_id, tcs))
+        return out
+
+    def _mirror_target(self, owner: ClientSlot,
+                       chunk: Chunk) -> Optional[ClientSlot]:
+        best: Optional[Tuple[Tuple[int, int, int], ClientSlot]] = None
+        for slot in self.slots.values():
+            if slot is owner or slot.quarantined or slot.open_chunks() == 0:
+                continue
+            overlap = sum(1 for fp in chunk.fps if fp in slot.shadow)
+            key = (-overlap, len(slot.chunks), slot.client_id)
+            if best is None or key < best[0]:
+                best = (key, slot)
+        return best[1] if best is not None else None
+
+    def _twin(self, chunk: Chunk) -> Optional[Chunk]:
+        tid = chunk.mirror_id if chunk.mirror_id is not None \
+            else chunk.mirror_of
+        return self.chunks.get(tid) if tid is not None else None
+
+    def _cancel_twin(self, winner: Chunk, loser: Chunk) -> None:
+        """Host-side cancel of the losing twin: its slot is freed now; any
+        answers the losing client still pushes ride the duplicate path."""
+        self.chunks.pop(loser.chunk_id, None)
+        lslot = self.slots.get(loser.client)
+        if lslot is not None and loser.chunk_id in lslot.chunks:
+            was_head = lslot.chunks[0] == loser.chunk_id
+            lslot.chunks.remove(loser.chunk_id)
+            if was_head and lslot.chunks:
+                succ = self.chunks[lslot.chunks[0]]
+                if succ.started_at is None:
+                    succ.started_at = self.clock()
+                    succ.started_seq = self._pull_seq
+        winner.mirror_id = winner.mirror_of = None
+        self.n_spec_cancelled += 1
+        if loser.mirror_of is not None:       # the mirror lost: primary won
+            self.n_spec_wins_primary += 1
+        else:
+            self.n_spec_wins_mirror += 1
 
     # -- results --------------------------------------------------------------
     def note_results(self) -> None:
@@ -234,7 +584,10 @@ class DispatchScheduler:
         (the host records it, rehydrating a slim echo from the returned tc),
         or None for duplicates.  Owner bookkeeping runs either way: the
         reporting client finished this config, and is topped up exactly when
-        it has answered its whole chunk itself.
+        it has answered its whole chunk itself.  Shadow learning rides the
+        same message: the reporter's ``CacheShadow`` is touched with the
+        config's fingerprint (confirming the optimistic dispatch mark) and
+        resynced from any attached ``cache_info`` summary.
         """
         cid = msg.get("config_id")
         info = self.inflight.pop(cid, None) if cid is not None else None
@@ -245,13 +598,36 @@ class DispatchScheduler:
             reporter = owner.client if owner is not None else None
         slot = self.slots.get(reporter)
         if slot is not None:
+            if self.fingerprint_fn is not None:
+                fp = self._fp.get(cid)
+                if fp is not None and (msg.get("cached")
+                                       or msg.get("status") == "ok"):
+                    slot.shadow.touch(fp)
+                ci = msg.get("cache_info")
+                if isinstance(ci, dict):
+                    slot.shadow.resync(ci.get("currsize"), ci.get("maxsize"))
             for chunk_id in list(slot.chunks):
                 chunk = self.chunks[chunk_id]
                 if cid in chunk.awaiting:
                     chunk.awaiting.discard(cid)
+                    twin = self._twin(chunk)
+                    if twin is not None:
+                        # twins shrink in lockstep: the other copy of this
+                        # config's work is no longer awaited either
+                        twin.awaiting.discard(cid)
                     if not chunk.awaiting:
+                        if twin is not None:
+                            self._cancel_twin(chunk, twin)
                         self._complete_chunk(slot, chunk)
+                    elif twin is not None and not twin.awaiting:
+                        # the twin emptied via cross-discards (it awaited a
+                        # subset — e.g. a mirror of a chunk with an already
+                        # straggler-answered cid): nothing left for it to
+                        # answer, so free its slot now
+                        self._cancel_twin(chunk, twin)
                     break
+        if tc is not None:
+            self._fp.pop(cid, None)
         return tc
 
     def _complete_chunk(self, slot: ClientSlot, chunk: Chunk) -> None:
@@ -288,8 +664,9 @@ class DispatchScheduler:
     # -- deadlines ------------------------------------------------------------
     def expire(self) -> List[Tuple[TestConfig, int]]:
         """Straggler sweep.  Quarantines clients that blew a chunk deadline
-        and fails over every chunk queued on them: survivors with retries
-        left rejoin the pending queue; the rest are returned as terminal
+        and fails over every chunk queued on them: configs covered by a live
+        speculative twin are handed to the twin, survivors with retries
+        left rejoin the pending queue, and the rest are returned as terminal
         ``(tc, client_id)`` timeouts for the host to record."""
         now = self.clock()
         terminal: List[Tuple[TestConfig, int]] = []
@@ -304,16 +681,28 @@ class DispatchScheduler:
             # never be answered either — fail them all over at once
             for dead_id in list(slot.chunks):
                 dead = self.chunks.pop(dead_id)
+                twin = self._twin(dead)
                 for cfg_id in sorted(dead.awaiting):
                     info = self.inflight.get(cfg_id)
                     if info is None or info["chunk"] != dead_id:
                         continue      # already answered (maybe by a peer)
+                    if twin is not None and cfg_id in twin.awaiting:
+                        # the live mirror already carries this config:
+                        # re-point ownership instead of re-queueing
+                        info["chunk"] = twin.chunk_id
+                        continue
                     del self.inflight[cfg_id]
                     if info["retries"] > 0:
                         self.pending.append((info["tc"], info["retries"] - 1))
                     else:
+                        self._fp.pop(cfg_id, None)
                         terminal.append((info["tc"], chunk.client))
+                if twin is not None:          # survivor completes standalone
+                    twin.mirror_id = twin.mirror_of = None
             slot.chunks.clear()
+            # a quarantined client's artifacts are unreachable: without this,
+            # strict affinity would strand its fingerprints forever
+            slot.shadow.clear()
         return terminal
 
     # -- introspection --------------------------------------------------------
@@ -322,9 +711,9 @@ class DispatchScheduler:
         return (not self.chunks
                 and all(s.quarantined for s in self.slots.values()))
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, Any]:
         busy = sum(1 for s in self.slots.values() if s.chunks)
-        s = {
+        s: Dict[str, Any] = {
             "pending": len(self.pending),
             "inflight": len(self.inflight),
             "chunks": len(self.chunks),
@@ -334,6 +723,17 @@ class DispatchScheduler:
             "mean_chunk": (self.n_configs_dispatched
                            / max(self.n_chunks_dispatched, 1)),
         }
+        if self.fingerprint_fn is not None:
+            s["affinity"] = self.affinity
+            s["fp_chunks"] = self.n_fp_chunks
+            s["affine_chunks"] = self.n_affine_chunks
+            s["shadow_sizes"] = {c: len(sl.shadow)
+                                 for c, sl in self.slots.items()}
+        if self.speculate_frac is not None:
+            s["speculated"] = self.n_speculated
+            s["spec_wins_primary"] = self.n_spec_wins_primary
+            s["spec_wins_mirror"] = self.n_spec_wins_mirror
+            s["spec_cancelled"] = self.n_spec_cancelled
         if self.wire_stats_fn is not None:
             try:
                 s.update(self.wire_stats_fn() or {})

@@ -444,25 +444,48 @@ def _pal_maybe_pareto_loop(ys: np.ndarray, lcb: np.ndarray) -> np.ndarray:
 class PAL(SearchAlgorithm):
     """ε-PAL-lite (Zuluaga et al., ICML 2013 — the paper's reference [4]):
     GP per objective; sample the candidate whose posterior uncertainty is
-    largest among points that could still be Pareto-optimal."""
+    largest among points that could still be Pareto-optimal.
+
+    Mean-only fast path (``mean_only=True``, incremental mode): like the
+    real ε-PAL, a candidate whose optimistic (LCB) objective box was found
+    dominated is *classified* — ruled out of the race permanently.  When
+    such a point re-enters a later candidate pool, its posterior is taken
+    from ``IncrementalGP.predict_mean_multi`` — means only, skipping the
+    ``(n, M)`` variance solve that dominates predict cost — and it scores
+    zero sampling width, so it can never outrank an unclassified candidate.
+    ``n_mean_only`` counts pool rows that rode the fast path.
+    """
 
     def __init__(self, space, seed: int = 0, n_init: int = 12,
                  pool_size: int = 512, beta: float = 1.8,
-                 gp_mode: str = "incremental"):
+                 gp_mode: str = "incremental", mean_only: bool = True):
         super().__init__(space, seed)
         self.n_init = n_init
         self.pool_size = pool_size
         self.beta = beta
         assert gp_mode in GP_MODES
         self.gp_mode = gp_mode
+        self.mean_only = mean_only
         self._gp = IncrementalGP()
         self._gp_pending: List[np.ndarray] = []
         self._seen = set()
+        self._ruled_out: set = set()          # flat keys classified not-Pareto
+        self._ruled_out_arr: Optional[np.ndarray] = None
+        self.n_mean_only = 0
 
     def tell(self, knobs: Dict, y: np.ndarray) -> None:
         super().tell(knobs, y)
         if self.gp_mode == "incremental":
             self._gp_pending.append(self.space.encode(knobs))
+
+    def _classified_mask(self, flats: np.ndarray) -> np.ndarray:
+        if not self._ruled_out:
+            return np.zeros(len(flats), bool)
+        if self._ruled_out_arr is None or \
+                len(self._ruled_out_arr) != len(self._ruled_out):
+            self._ruled_out_arr = np.fromiter(
+                self._ruled_out, np.int64, len(self._ruled_out))
+        return np.isin(flats, self._ruled_out_arr)
 
     def ask(self, n: int) -> List[Dict]:
         out: List[Dict] = []
@@ -482,8 +505,23 @@ class PAL(SearchAlgorithm):
             if self._gp_pending:
                 self._gp.observe(np.stack(self._gp_pending))
                 self._gp_pending.clear()
-            mu, sig = self._gp.fit_y_multi(ys).predict_multi(xp)
+            gp = self._gp.fit_y_multi(ys)
+            known = (self._classified_mask(flats)
+                     if self.mean_only else np.zeros(len(flats), bool))
+            if known.any():
+                # classified points: means only, zero width — the variance
+                # solve is skipped for the whole classified slice
+                mu = np.empty((len(xp), ys.shape[1]))
+                sig = np.zeros_like(mu)
+                fresh = ~known
+                if fresh.any():
+                    mu[fresh], sig[fresh] = gp.predict_multi(xp[fresh])
+                mu[known] = gp.predict_mean_multi(xp[known])
+                self.n_mean_only += int(known.sum())
+            else:
+                mu, sig = gp.predict_multi(xp)
         else:
+            known = np.zeros(len(flats), bool)
             gp = GP().fit_x(self.observed_points())
             mus, sigs = [], []
             for j in range(ys.shape[1]):
@@ -494,6 +532,11 @@ class PAL(SearchAlgorithm):
             sig = np.stack(sigs, 1)
         lcb = mu - self.beta * sig
         maybe = pal_maybe_pareto(ys, lcb)
+        if self.mean_only and self.gp_mode == "incremental":
+            # a full-posterior LCB box found dominated is a permanent
+            # classification (the ε-PAL discard step)
+            for f in flats[~maybe & ~known]:
+                self._ruled_out.add(int(f))
         width = np.sum(sig, axis=1) * np.where(maybe, 1.0, 0.05)
         for i in np.argsort(-width):
             if len(out) >= n:

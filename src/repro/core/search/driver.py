@@ -15,7 +15,10 @@ and moves that math off the host's critical path:
   folded into the algorithm at ask boundaries — stale-tolerant by design: a
   precomputed pick may lag the newest few observations, exactly like a
   pipelined chunk that was dispatched before its predecessor's results
-  landed.  The host's side of the contract is ``poll_ask``: non-blocking
+  landed.  ``max_stale_tells`` bounds that tolerance: a buffered pick that
+  would lag the model by more than that many folded tells is discarded and
+  recomputed (counted in ``stats()["stale_dropped"]``) instead of being
+  handed out.  The host's side of the contract is ``poll_ask``: non-blocking
   whenever evaluation work is in flight (``DispatchScheduler.busy()``), and
   blocking only when the loop cannot otherwise make progress.  The
   scheduler's ``want(lookahead=...)`` is the matching backpressure signal —
@@ -43,13 +46,25 @@ class SearchDriver:
     """Plug-in wrapper: speaks ask/tell plus the host's non-blocking hooks."""
 
     def __init__(self, algo: SearchAlgorithm, mode: str = "async",
-                 round_size: int = 32):
+                 round_size: int = 32,
+                 max_stale_tells: Optional[int] = None):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if max_stale_tells is not None and max_stale_tells < 0:
+            raise ValueError(f"max_stale_tells must be >= 0, "
+                             f"got {max_stale_tells!r}")
         self.algo = algo
         self.mode = mode
         self.round_size = max(int(round_size), 1)
-        self._buf: Deque[Dict] = deque()
+        # staleness bound: a buffered pick was computed against the model
+        # state at some tell count; once the model has folded more than
+        # ``max_stale_tells`` newer observations, the stale buffer is
+        # discarded and recomputed instead of being handed out (None keeps
+        # the unbounded stale-tolerant behaviour)
+        self.max_stale_tells = max_stale_tells
+        # buffer entries are (pick, fold-count when the pick was computed),
+        # so staleness is judged per pick, not per buffer generation
+        self._buf: Deque[Tuple[Dict, int]] = deque()
         self._tells: Deque[Tuple[Dict, np.ndarray]] = deque()
         self._target = 0
         self._closing = False
@@ -58,6 +73,7 @@ class SearchDriver:
         self.n_rounds = 0          # worker ask rounds computed
         self.n_precomputed = 0     # configs ever placed in the buffer
         self.n_tells_folded = 0    # buffered tells folded into the algo
+        self.n_stale_dropped = 0   # precomputed picks discarded as too stale
         self._worker: Optional[threading.Thread] = None
         if mode == "async":
             self._worker = threading.Thread(target=self._run, daemon=True,
@@ -101,7 +117,7 @@ class SearchDriver:
                 self._cond.wait()
             if self._err is not None:
                 raise RuntimeError("search worker died") from self._err
-            out = [self._buf.popleft()
+            out = [self._buf.popleft()[0]
                    for _ in range(min(n, len(self._buf)))]
             if out:
                 self._cond.notify_all()        # buffer has room: refill
@@ -143,7 +159,8 @@ class SearchDriver:
                     "pending_tells": len(self._tells),
                     "rounds": self.n_rounds,
                     "precomputed": self.n_precomputed,
-                    "tells_folded": self.n_tells_folded}
+                    "tells_folded": self.n_tells_folded,
+                    "stale_dropped": self.n_stale_dropped}
 
     # -- worker ---------------------------------------------------------------
     def _run(self) -> None:
@@ -156,6 +173,16 @@ class SearchDriver:
                     return
                 tells = list(self._tells)
                 self._tells.clear()
+                if self.max_stale_tells is not None and self._buf:
+                    # discard (oldest-first: bases are monotone) only the
+                    # picks that will lag the model by more than the bound
+                    # once this round folds; this round recomputes them
+                    # against fresh state
+                    folded = self.n_tells_folded + len(tells)
+                    while self._buf and (folded - self._buf[0][1]
+                                         > self.max_stale_tells):
+                        self._buf.popleft()
+                        self.n_stale_dropped += 1
                 want = max(self._target, 1) - len(self._buf)
                 # empty buffer means the host may be blocked on us: compute
                 # a small round first to unblock it, then get ahead with
@@ -178,5 +205,5 @@ class SearchDriver:
                 if picks:
                     self.n_rounds += 1
                     self.n_precomputed += len(picks)
-                    self._buf.extend(picks)
+                    self._buf.extend((p, self.n_tells_folded) for p in picks)
                 self._cond.notify_all()

@@ -80,14 +80,20 @@ def frame_batch(msgs: List[dict]) -> dict:
 
 
 def unframe_batch(msg: Optional[dict]) -> List[dict]:
-    """Normalise a pulled message to a list of payload dicts."""
+    """Normalise a pulled message to a list of payload dicts.
+
+    Frame-level sidecar fields (currently ``cache_info``, the artifact-cache
+    summary a client attaches once per result frame) are re-attached to the
+    *last* payload dict, so per-frame metadata survives the row/column
+    transpose without being duplicated onto every result.
+    """
     if msg is None:
         return []
     cmd = msg.get("cmd")
     if cmd == BATCH_CMD:
-        return list(msg["items"])
-    if cmd == BATCH_COLS_CMD:
-        items: List[dict] = [{} for _ in range(msg["n"])]
+        items: List[dict] = list(msg["items"])
+    elif cmd == BATCH_COLS_CMD:
+        items = [{} for _ in range(msg["n"])]
         for k, col in msg["plain"].items():
             for it, v in zip(items, col):
                 it[k] = v
@@ -99,8 +105,12 @@ def unframe_batch(msg: Optional[dict]) -> List[dict]:
             rebuilt = [dict(zip(sub.keys(), row)) for row in zip(*sub.values())]
             for it, v in zip(items, rebuilt):
                 it[k] = v
-        return items
-    return [msg]
+    else:
+        return [msg]
+    sidecar = msg.get("cache_info")
+    if sidecar is not None and items:
+        items[-1] = dict(items[-1], cache_info=sidecar)
+    return items
 
 
 class WireStats:
@@ -214,12 +224,21 @@ class ClientTransport:
     def push(self, msg: dict) -> None:
         raise NotImplementedError
 
-    def push_many(self, msgs: List[dict]) -> None:
-        """Ship a whole batch of results as one framed message."""
-        if len(msgs) == 1:
+    def push_many(self, msgs: List[dict],
+                  extra: Optional[dict] = None) -> None:
+        """Ship a whole batch of results as one framed message.
+
+        ``extra`` keys ride on the frame dict itself (once per frame, not
+        per result) and are re-attached by ``unframe_batch`` on the far
+        side — how a client reports ``cache_info`` per chunk reply.
+        """
+        if len(msgs) == 1 and not extra:
             self.push(msgs[0])
         elif msgs:
-            self.push(frame_batch(msgs))
+            frame = frame_batch(msgs)
+            if extra:
+                frame.update(extra)
+            self.push(frame)
 
     def pull_many(self, timeout_s: float) -> List[dict]:
         return unframe_batch(self.pull(timeout_s))

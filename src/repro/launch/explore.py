@@ -54,6 +54,31 @@ def parse_args():
     p.add_argument("--codec", default="json", choices=["json", "binary"],
                    help="wire codec: binary packs columnar frames' numeric "
                         "columns as typed arrays (fleet-friendly)")
+    p.add_argument("--affinity", default="off",
+                   choices=["off", "prefer", "strict"],
+                   help="compile-affinity placement: route chunks to the "
+                        "client already holding their sw fingerprint "
+                        "compiled (prefer: steal rather than idle; strict: "
+                        "a fingerprint's work always waits for its home "
+                        "client while it is healthy)")
+    p.add_argument("--pipeline-depth", type=int, default=None,
+                   help="queued chunks per client under --dispatch "
+                        "pipelined (default 2 = double-buffering; deeper "
+                        "hides higher-latency links)")
+    p.add_argument("--speculate-at", type=float, default=None, metavar="FRAC",
+                   help="speculative re-dispatch: mirror a running chunk to "
+                        "a second client once it has burned this fraction "
+                        "of its deadline budget (first answer wins)")
+    p.add_argument("--cache-dir", default=None,
+                   help="persistent artifact cache root: compiled artifacts "
+                        "are pickled content-addressed under "
+                        "<cache-dir>/client<i>/ so restarted clients and "
+                        "repeated sweeps skip the compile (layout + "
+                        "invalidation rules: repro.core.jclient docstring)")
+    p.add_argument("--max-stale-tells", type=int, default=None,
+                   help="with --async-search: discard precomputed asks "
+                        "lagging the model by more than this many folded "
+                        "tells (default: unbounded stale tolerance)")
     p.add_argument("--async-search", action="store_true",
                    help="precompute asks in a background worker and fold "
                         "tells in at ask boundaries (SearchDriver), so "
@@ -150,7 +175,11 @@ def main():
 
     pair = transport.LoopbackPair(args.clients, codec=args.codec)
     build_fn = make_build_fn(args, jc)
-    clients = [JClient(jc, build_fn, transport=pair.client(i), client_id=i)
+    # each client gets its own persistent-cache subtree, like each board
+    # owning its own disk on a real fleet
+    clients = [JClient(jc, build_fn, transport=pair.client(i), client_id=i,
+                       cache_dir=(None if args.cache_dir is None else
+                                  os.path.join(args.cache_dir, f"client{i}")))
                for i in range(args.clients)]
     threads = [threading.Thread(target=c.serve,
                                 kwargs=dict(poll_s=0.1, idle_limit_s=None),
@@ -171,13 +200,20 @@ def main():
     if args.async_search:
         from repro.core import SearchDriver
 
-        search = SearchDriver(algo, mode="async")
+        search = SearchDriver(algo, mode="async",
+                              max_stale_tells=args.max_stale_tells)
     t0 = time.time()
     try:
         host.explore(search, args.workload, args.shape, args.samples,
                      objectives=("time_s", "power_w"), progress=True,
                      batch_size=args.batch_size, dispatch=args.dispatch,
-                     chunk_budget_ms=args.chunk_budget_ms)
+                     chunk_budget_ms=args.chunk_budget_ms,
+                     affinity=args.affinity,
+                     fingerprint_fn=(jc.cache_key if args.affinity != "off"
+                                     or args.speculate_at is not None
+                                     else None),
+                     speculate_frac=args.speculate_at,
+                     pipeline_depth=args.pipeline_depth)
     finally:
         if search is not algo:
             print(f"[explore] search driver: {search.stats()}")

@@ -1,0 +1,677 @@
+"""Compile-affinity fleet scheduling + persistent artifact cache (PR 4):
+CacheShadow LRU-fidelity vs a live JClient trace (property test), affinity
+placement under quarantine/failover, speculative re-dispatch winner/loser
+accounting, the persistent cache tier across client restarts, pipeline
+depth >2, the SearchDriver staleness bound, and PAL's mean-only path."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container has no hypothesis
+    from _propcheck import given, settings, st
+
+from repro.core import (DispatchScheduler, JClient, JConfig, JHost, PAL,
+                        ResultStore, SearchDriver, TestConfig, transport)
+from repro.core.scheduler import CacheShadow
+from repro.core.space import DesignSpace, KIND_HW, KIND_SW, Knob
+from repro.core.transport import unframe_batch
+from repro.roofline.analysis import Artifact
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def toy_artifact(f=5e12, n_dev=256):
+    return Artifact(flops_per_device=f, bytes_per_device=2e10,
+                    wire_bytes_per_device=1e8, collectives={},
+                    arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                    output_bytes=10 ** 6, n_devices=n_dev)
+
+
+def small_space(n_fps=4):
+    return DesignSpace([
+        Knob("clock_scale", (0.5, 1.0), KIND_HW),
+        Knob("blk", tuple(range(n_fps)), KIND_SW),
+    ])
+
+
+def counting_build(jc, cost_s=0.0):
+    calls = []
+
+    def build(tc):
+        if cost_s:
+            time.sleep(cost_s)
+        calls.append(jc.cache_key(tc))
+        h = hash(jc.cache_key(tc)) % 7 + 1
+        return toy_artifact(5e12 * h), {"decode_artifact": toy_artifact(1e11 * h),
+                                        "n_decode_tokens": 10}
+
+    return build, calls
+
+
+# scheduler-level helpers: configs whose fingerprint is just a knob value
+def ftc(i, fp):
+    return TestConfig(i, "a", "s", {"x": i, "sw": fp})
+
+
+def fp_of(tc):
+    return tc.knobs["sw"]
+
+
+def ok(cid, client, cached=False, **extra):
+    msg = {"config_id": cid, "status": "ok", "client_id": client,
+           "metrics": {"time_s": 1.0}, "cached": cached, "wall_s": 0.0}
+    msg.update(extra)
+    return msg
+
+
+def answer(sched, client, tcs, **extra):
+    for t in tcs:
+        sched.on_result(ok(t.config_id, client, **extra))
+
+
+def affinity_sched(clients=(0, 1), clk=None, **kw):
+    kw.setdefault("policy", "pipelined")
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("affinity", "prefer")
+    return DispatchScheduler(clients, fingerprint_fn=fp_of,
+                             clock=clk or FakeClock(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# CacheShadow: the host's model must track a real JClient LRU exactly
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=60),
+       st.integers(min_value=1, max_value=6))
+def test_shadow_matches_jclient_lru_trace(fp_seq, capacity):
+    """Drive a live JClient and a CacheShadow with the same fingerprint
+    sequence: residency verdicts, resident sets, LRU order, and eviction
+    counts must all agree at every step."""
+    space = small_space(n_fps=10)
+    jc = JConfig(space, n_chips=8)
+    build, _ = counting_build(jc)
+    client = JClient(jc, build, cache_size=capacity)
+    shadow = CacheShadow(capacity)
+    for i, fp in enumerate(fp_seq):
+        tc = TestConfig(i, "a", "s", {"clock_scale": 1.0, "blk": fp})
+        key = jc.cache_key(tc)
+        was_resident = key in client._cache
+        client._artifact(key, tc)
+        assert shadow.touch(key) == was_resident
+        assert shadow.keys() == list(client._cache)      # same LRU order
+        assert shadow.evictions == client._cache_evictions
+
+
+def test_shadow_resync_trims_and_retunes():
+    shadow = CacheShadow(8)
+    for fp in "abcde":
+        shadow.touch(fp)
+    shadow.resync(currsize=3, maxsize=3)
+    assert shadow.capacity == 3
+    assert shadow.keys() == ["c", "d", "e"]              # LRU end trimmed
+    shadow.touch("f")                                    # evicts at new cap
+    assert len(shadow) == 3 and "c" not in shadow
+
+
+def test_shadow_resync_drops_optimistic_marks_before_confirmed():
+    shadow = CacheShadow(8)
+    shadow.touch("a")                         # confirmed from results
+    shadow.touch("b")
+    shadow.touch("x", confirmed=False)        # optimistic dispatch marks
+    shadow.touch("y", confirmed=False)
+    shadow.resync(currsize=2, maxsize=8)
+    # the client says it holds 2: the unconfirmed marks (e.g. a failed
+    # chunk's groups) are the suspects, not the known-resident entries
+    assert shadow.keys() == ["a", "b"]
+    shadow.touch("x", confirmed=False)
+    shadow.resync(currsize=2, maxsize=8)
+    assert shadow.keys() == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# affinity placement
+# ---------------------------------------------------------------------------
+
+
+def test_unclaimed_groups_spread_one_per_chunk():
+    s = affinity_sched(batch_size=4)
+    for i, fp in enumerate("AABB"):
+        s.submit(ftc(i, fp))
+    d = s.next_dispatches()
+    # two fresh compile groups -> two single-fingerprint chunks, one per
+    # client, even though either chunk had room for both groups
+    assert len(d) == 2
+    placed = {cfgs[0].knobs["sw"]: c for c, cfgs in d}
+    assert set(placed) == {"A", "B"}
+    assert len({c for c in placed.values()}) == 2
+    for _, cfgs in d:
+        assert len({t.knobs["sw"] for t in cfgs}) == 1
+
+
+def test_affinity_routes_to_resident_client():
+    clk = FakeClock()
+    s = affinity_sched(clk=clk, batch_size=2)
+    for i, fp in enumerate("AABB"):
+        s.submit(ftc(i, fp))
+    first = dict()
+    for c, cfgs in s.next_dispatches():
+        first[cfgs[0].knobs["sw"]] = c
+        answer(s, c, cfgs)
+    # new work for both fingerprints goes home, regardless of submit order
+    s.submit(ftc(10, "B"))
+    s.submit(ftc(11, "A"))
+    s.submit(ftc(12, "B"))
+    homes = {cfgs[0].knobs["sw"]: c for c, cfgs in s.next_dispatches()}
+    assert homes["A"] == first["A"]
+    assert homes["B"] == first["B"]
+
+
+def test_resident_groups_ride_along_with_one_new_group():
+    s = affinity_sched(clients=(0,), batch_size=8)
+    for i, fp in enumerate("AAAA"):
+        s.submit(ftc(i, fp))
+    (c0, cfgs0), = s.next_dispatches()
+    answer(s, c0, cfgs0)
+    # A is resident; a mixed backlog packs resident A's plus exactly one
+    # new group (B) into the first chunk — C waits for its own chunk
+    for i, fp in enumerate("ABBC", start=10):
+        s.submit(ftc(i, fp))
+    d = s.next_dispatches()
+    assert set(t.knobs["sw"] for t in d[0][1]) == {"A", "B"}
+    assert [t.knobs["sw"] for t in d[1][1]] == ["C"]
+
+
+def test_strict_waits_for_busy_home_client():
+    s = affinity_sched(affinity="strict", policy="eager", batch_size=2)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()        # A claimed by client 0
+    s.submit(ftc(2, "A"))
+    s.submit(ftc(3, "A"))
+    # client 0 is busy (eager depth-1) and client 1 is idle, but strict
+    # never re-compiles a group a healthy client already owns
+    assert s.next_dispatches() == []
+    assert len(s.pending) == 2
+    answer(s, c0, cfgs0)
+    (c1, cfgs1), = s.next_dispatches()
+    assert c1 == c0
+
+
+def test_prefer_steals_rather_than_idle():
+    s = affinity_sched(affinity="prefer", policy="eager", batch_size=2)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    s.submit(ftc(2, "A"))
+    s.submit(ftc(3, "A"))
+    d = s.next_dispatches()                   # the idle client takes them
+    assert [c for c, _ in d] == [1 - c0]
+
+
+def test_quarantine_clears_shadow_and_fails_over():
+    clk = FakeClock()
+    s = affinity_sched(affinity="strict", policy="eager", batch_size=2,
+                       clk=clk, timeout_s=10.0, max_retries=2)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    clk.advance(25.0)                         # blow the 2-config deadline
+    assert s.expire() == []                   # retries left
+    assert c0 in s.quarantined
+    assert len(s.slots[c0].shadow) == 0       # dead home forgets its cache
+    d = s.next_dispatches()                   # strict now re-homes the group
+    assert [c for c, _ in d] == [1 - c0]
+
+
+def test_affinity_requires_fingerprint_fn():
+    with pytest.raises(ValueError):
+        DispatchScheduler([0], affinity="prefer")
+
+
+# ---------------------------------------------------------------------------
+# speculative re-dispatch
+# ---------------------------------------------------------------------------
+
+
+def spec_sched(clk, **kw):
+    kw.setdefault("policy", "eager")
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("timeout_s", 10.0)
+    kw.setdefault("speculate_frac", 0.5)
+    return DispatchScheduler([0, 1], fingerprint_fn=fp_of, clock=clk, **kw)
+
+
+def test_mirror_dispatched_at_deadline_fraction():
+    clk = FakeClock()
+    s = spec_sched(clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    clk.advance(9.0)                          # budget 20, frac 0.5 -> at 10
+    assert s.next_dispatches() == []
+    clk.advance(1.5)
+    d = s.next_dispatches()
+    assert [c for c, _ in d] == [1 - c0]      # mirrored to the idle peer
+    assert [t.config_id for t in d[0][1]] == [0, 1]
+    assert s.n_speculated == 1
+    assert s.next_dispatches() == []          # never mirrored twice
+
+
+def test_mirror_win_cancels_primary_and_dedupes_late_answers():
+    clk = FakeClock()
+    s = spec_sched(clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    clk.advance(11.0)
+    (c1, _), = s.next_dispatches()
+    assert s.on_result(ok(0, c1)) is not None     # mirror answers first
+    assert s.on_result(ok(1, c1)) is not None
+    assert s.n_spec_wins_mirror == 1 and s.n_spec_cancelled == 1
+    assert not s.chunks and not s.inflight        # both twins retired
+    assert not s.slots[c0].chunks and not s.slots[c1].chunks
+    # the losing primary's late answers are plain duplicates
+    assert s.on_result(ok(0, c0)) is None
+    assert s.on_result(ok(1, c0)) is None
+
+
+def test_primary_win_cancels_mirror():
+    clk = FakeClock()
+    s = spec_sched(clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    clk.advance(11.0)
+    (c1, _), = s.next_dispatches()
+    answer(s, c0, cfgs0)                          # owner answers after all
+    assert s.n_spec_wins_primary == 1 and s.n_spec_cancelled == 1
+    assert not s.chunks and not s.slots[c1].chunks
+
+
+def test_expired_primary_hands_configs_to_live_mirror():
+    clk = FakeClock()
+    s = spec_sched(clk, max_retries=2)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    clk.advance(11.0)
+    (c1, _), = s.next_dispatches()
+    clk.advance(10.0)                             # past the primary deadline
+    assert s.expire() == []
+    assert c0 in s.quarantined
+    # nothing re-queued: the mirror already carries both configs
+    assert len(s.pending) == 0
+    assert all(s.inflight[c]["chunk"] in
+               {cid for cid in s.chunks} for c in (0, 1))
+    assert s.on_result(ok(0, c1)) is not None
+    assert s.on_result(ok(1, c1)) is not None
+    assert not s.chunks and not s.inflight
+
+
+def test_mirror_skips_straggler_answered_configs():
+    """A cid the owner still awaits but a peer already answered is neither
+    re-sent to the mirror nor awaited from it — whichever side empties
+    first, both slots end up free and late answers stay duplicates."""
+    clk = FakeClock()
+    s = spec_sched(clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    # a peer answers cfg 0: recorded, but the owner still owes its chunk
+    assert s.on_result(ok(0, 1 - c0)) is not None
+    clk.advance(11.0)
+    (c1, mirrored), = s.next_dispatches()
+    assert [t.config_id for t in mirrored] == [1]     # cfg 0 not re-sent
+    assert s.chunks[s.slots[c1].chunks[0]].awaiting == {1}
+    assert s.on_result(ok(1, c1)) is not None         # mirror answers it
+    assert s.n_spec_wins_mirror == 1
+    # the cancelled primary's own late answers are duplicates, and its
+    # slot was freed by the cancel
+    assert not s.slots[c0].chunks and not s.slots[c1].chunks
+    assert s.on_result(ok(0, c0)) is None
+    assert s.on_result(ok(1, c0)) is None
+    assert not s.chunks and not s.inflight
+
+
+def test_emptied_mirror_is_cancelled_while_primary_finishes():
+    clk = FakeClock()
+    s = spec_sched(clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    (c0, cfgs0), = s.next_dispatches()
+    assert s.on_result(ok(0, 1 - c0)) is not None     # straggler answer
+    clk.advance(11.0)
+    (c1, mirrored), = s.next_dispatches()
+    # the PRIMARY answers the mirrored config first: the mirror has
+    # nothing left to wait for and must not block its slot until a
+    # deadline quarantines an innocent client
+    assert s.on_result(ok(1, c0)) is not None
+    assert s.n_spec_cancelled == 1 and s.n_spec_wins_primary == 1
+    assert not s.slots[c1].chunks
+    # the owner still owes cfg 0 itself; its duplicate answer frees it
+    assert s.slots[c0].chunks
+    assert s.on_result(ok(0, c0)) is None
+    assert not s.slots[c0].chunks and not s.chunks
+
+
+def test_no_mirror_without_capacity():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="eager", batch_size=2, timeout_s=10.0,
+                          speculate_frac=0.5, fingerprint_fn=fp_of, clock=clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "A"))
+    s.next_dispatches()
+    clk.advance(15.0)
+    assert s.next_dispatches() == []              # nowhere to mirror to
+    assert s.n_speculated == 0
+
+
+# ---------------------------------------------------------------------------
+# pipeline depth > 2
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_depth_generalizes_double_buffering():
+    clk = FakeClock()
+    s = DispatchScheduler([0], policy="pipelined", batch_size=2,
+                          pipeline_depth=4, timeout_s=10.0, clock=clk)
+    assert s.want() == 8                      # depth 4 x 2 configs
+    for i in range(20):
+        s.submit(ftc(i, "A"))
+    d = s.next_dispatches()
+    assert [len(cfgs) for _, cfgs in d] == [2, 2, 2, 2]
+    assert s.next_dispatches() == []          # invariant: never deeper than 4
+    # stacked deadlines: each queued chunk's clock starts at its
+    # predecessor's budget end, at any depth
+    deadlines = [s.chunks[c].deadline for c in s.slots[0].chunks]
+    assert deadlines == [pytest.approx(20.0 * k) for k in range(1, 5)]
+    answer(s, 0, d[0][1])
+    assert len(s.slots[0].chunks) == 3
+    assert [len(cfgs) for _, cfgs in s.next_dispatches()] == [2]
+
+
+def test_pipeline_depth_validation():
+    with pytest.raises(ValueError):
+        DispatchScheduler([0], pipeline_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# persistent artifact cache (cache_dir)
+# ---------------------------------------------------------------------------
+
+
+def test_restarted_client_rides_disk_tier(tmp_path):
+    space = small_space(n_fps=3)
+    jc = JConfig(space, n_chips=8)
+    build, calls = counting_build(jc)
+    rng = np.random.default_rng(0)
+    tcs = [TestConfig(i, "a", "s", space.sample(rng)) for i in range(12)]
+    unique = len({jc.cache_key(t) for t in tcs})
+
+    c1 = JClient(jc, build, cache_size=8, cache_dir=str(tmp_path))
+    res1 = c1.evaluate_batch(tcs)
+    assert c1.n_compiled == unique
+    assert c1.cache_info()["disk_stores"] == unique
+
+    c2 = JClient(jc, build, cache_size=8, cache_dir=str(tmp_path))  # restart
+    res2 = c2.evaluate_batch(tcs)
+    assert c2.n_compiled == 0                     # every build from disk
+    assert c2.cache_info()["disk_hits"] == unique
+    for a, b in zip(res1, res2):
+        assert a["metrics"] == b["metrics"]
+
+
+def test_corrupt_disk_entry_is_a_miss(tmp_path):
+    space = small_space()
+    jc = JConfig(space, n_chips=8)
+    build, _ = counting_build(jc)
+    tc = TestConfig(0, "a", "s", {"clock_scale": 1.0, "blk": 1})
+    c1 = JClient(jc, build, cache_dir=str(tmp_path))
+    c1.evaluate(tc)
+    path = c1._disk_path(jc.cache_key(tc))
+    with open(path, "wb") as f:
+        f.write(b"not a pickle")
+    c2 = JClient(jc, build, cache_dir=str(tmp_path))
+    assert c2.evaluate(tc)["status"] == "ok"
+    assert c2.n_compiled == 1                     # rebuilt, not crashed
+    assert c2.cache_info()["disk_hits"] == 0
+
+
+def test_disk_tier_respects_jconfig_identity(tmp_path):
+    space = small_space()
+    jc8 = JConfig(space, n_chips=8)
+    build, _ = counting_build(jc8)
+    tc = TestConfig(0, "a", "s", {"clock_scale": 1.0, "blk": 1})
+    JClient(jc8, build, cache_dir=str(tmp_path)).evaluate(tc)
+    # same knobs, different fleet shape: must not be served the old artifact
+    jc16 = JConfig(space, n_chips=16)
+    build16, calls16 = counting_build(jc16)
+    c = JClient(jc16, build16, cache_dir=str(tmp_path))
+    c.evaluate(tc)
+    assert c.n_compiled == 1 and len(calls16) == 1
+
+
+def test_client_restart_mid_run_integration(tmp_path):
+    """Host explores a sweep, the client 'process' restarts (fresh JClient,
+    same --cache-dir), the host explores again: the restarted client must
+    answer every group from the persistent tier without one recompile."""
+    space = small_space(n_fps=4)
+    jc = JConfig(space, n_chips=8)
+    build, _ = counting_build(jc)
+    rng = np.random.default_rng(1)
+    knobs = [space.sample(rng) for _ in range(24)]
+    unique = len({jc.cache_key(TestConfig(0, "a", "s", k)) for k in knobs})
+
+    pair = transport.LoopbackPair(1)
+
+    class Replay:
+        def __init__(self, ks):
+            self._k = list(ks)
+
+        def ask(self, n):
+            out, self._k = self._k[:n], self._k[n:]
+            return out
+
+        def tell(self, knobs, y):
+            pass
+
+    c1 = JClient(jc, build, transport=pair.client(0), client_id=0,
+                 cache_size=8, cache_dir=str(tmp_path))
+    t1 = threading.Thread(target=c1.serve, kwargs=dict(poll_s=0.01),
+                          daemon=True)
+    t1.start()
+    host = JHost(pair.host(), ResultStore(), timeout_s=60.0, poll_s=0.01)
+    host.explore(Replay(knobs), "a", "s", len(knobs), batch_size=6,
+                 dispatch="pipelined", affinity="prefer",
+                 fingerprint_fn=jc.cache_key)
+    host.transport.push(0, {"cmd": "stop"})
+    t1.join(timeout=10.0)
+    assert c1.n_compiled == unique
+
+    # restart: a brand-new client instance on the same wire + cache dir
+    c2 = JClient(jc, build, transport=pair.client(0), client_id=0,
+                 cache_size=8, cache_dir=str(tmp_path))
+    t2 = threading.Thread(target=c2.serve, kwargs=dict(poll_s=0.01),
+                          daemon=True)
+    t2.start()
+    store = host.explore(Replay(knobs), "a", "s", len(knobs), batch_size=6,
+                         dispatch="pipelined", affinity="prefer",
+                         fingerprint_fn=jc.cache_key)
+    host.transport.push(0, {"cmd": "stop"})
+    t2.join(timeout=10.0)
+    assert c2.n_compiled == 0                     # no recompiles after restart
+    assert c2.cache_info()["disk_hits"] == unique
+    assert sum(1 for r in store.records if r.status == "ok") >= len(knobs)
+
+
+# ---------------------------------------------------------------------------
+# cache_info wire plumbing + shadow resync from replies
+# ---------------------------------------------------------------------------
+
+
+def test_cache_info_rides_result_frames():
+    pair = transport.LoopbackPair(1)
+    ct = pair.client(0)
+    msgs = [ok(i, 0) for i in range(3)]
+    ct.push_many(msgs, extra={"cache_info": {"currsize": 2, "maxsize": 2}})
+    got = pair.host().pull_many(1.0)
+    assert len(got) == 3
+    assert "cache_info" not in got[0] and "cache_info" not in got[1]
+    assert got[-1]["cache_info"] == {"currsize": 2, "maxsize": 2}
+
+
+def test_serve_attaches_cache_info_and_scheduler_resyncs():
+    space = small_space(n_fps=6)
+    jc = JConfig(space, n_chips=8)
+    build, _ = counting_build(jc)
+    pair = transport.LoopbackPair(1)
+    client = JClient(jc, build, transport=pair.client(0), client_id=0,
+                     cache_size=2)
+    threading.Thread(target=client.serve, kwargs=dict(poll_s=0.01),
+                     daemon=True).start()
+    host_t = pair.host()
+    rng = np.random.default_rng(3)
+    tcs = [TestConfig(i, "a", "s", space.sample(rng)) for i in range(10)]
+    sched = DispatchScheduler([0], policy="eager", batch_size=len(tcs),
+                              affinity="prefer", fingerprint_fn=jc.cache_key,
+                              client_cache_size=64)
+    for t in tcs:
+        sched.submit(t)
+    got = []
+    deadline = time.monotonic() + 30.0
+    while len(got) < len(tcs):
+        for cid, chunk in sched.next_dispatches():
+            host_t.push_many(cid, [t.to_wire() for t in chunk])
+        msgs = host_t.pull_many(0.05)
+        if msgs:
+            sched.note_results()
+        for m in msgs:
+            sched.on_result(m)
+            got.append(m)
+        assert time.monotonic() < deadline, "client stalled"
+    infos = [m["cache_info"] for m in got if "cache_info" in m]
+    assert infos and infos[-1]["maxsize"] == 2
+    # the optimistic dispatch marks were trimmed back to the client's
+    # actual 2-slot LRU by the reply's cache_info sidecar
+    shadow = sched.slots[0].shadow
+    assert shadow.capacity == 2 and len(shadow) <= 2
+    host_t.push(0, {"cmd": "stop"})
+
+
+# ---------------------------------------------------------------------------
+# SearchDriver staleness bound
+# ---------------------------------------------------------------------------
+
+
+class _BasisAlgo:
+    """Records how many tells had been folded when each ask ran."""
+
+    def __init__(self):
+        self.n_told = 0
+        self.ask_basis = []
+        self._i = 0
+
+    def ask(self, n):
+        self.ask_basis.append(self.n_told)
+        out = [{"i": self._i + k} for k in range(n)]
+        self._i += n
+        return out
+
+    def tell(self, knobs, y):
+        self.n_told += 1
+
+
+def _wait(cond_fn, timeout_s=10.0):
+    deadline = time.monotonic() + timeout_s
+    while not cond_fn():
+        if time.monotonic() > deadline:
+            return False
+        time.sleep(0.002)
+    return True
+
+
+def test_max_stale_tells_discards_and_recomputes():
+    algo = _BasisAlgo()
+    drv = SearchDriver(algo, mode="async", round_size=4, max_stale_tells=0)
+    try:
+        drv.note_demand(8)
+        assert _wait(lambda: drv.ready() >= 8)
+        for _ in range(3):
+            drv.tell({"k": 1}, np.array([1.0, 2.0]))
+        # the worker folds the tells (possibly across several rounds, each
+        # finding the buffer staler than the bound), discards it, and
+        # recomputes from fresh model state; the first discard alone drops
+        # the whole 8-pick buffer
+        assert _wait(lambda: (drv.stats()["tells_folded"] == 3
+                              and drv.stats()["pending_tells"] == 0
+                              and drv.ready() >= 1))
+        assert drv.stats()["stale_dropped"] >= 8
+        picks = drv.poll_ask(1, need=True)
+        assert picks
+        assert algo.ask_basis[-1] == 3        # recomputed after the fold
+    finally:
+        drv.close()
+
+
+def test_unbounded_staleness_keeps_buffer():
+    algo = _BasisAlgo()
+    drv = SearchDriver(algo, mode="async", round_size=4)
+    try:
+        drv.note_demand(8)
+        assert _wait(lambda: drv.ready() >= 8)
+        for _ in range(5):
+            drv.tell({"k": 1}, np.array([1.0, 2.0]))
+        assert _wait(lambda: drv.stats()["pending_tells"] == 0)
+        assert drv.stats()["stale_dropped"] == 0
+        assert drv.ready() >= 8               # stale-tolerant by default
+    finally:
+        drv.close()
+
+
+# ---------------------------------------------------------------------------
+# PAL mean-only fast path
+# ---------------------------------------------------------------------------
+
+
+def _drive_pal(pal, n, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        c = pal.ask(1)[0]
+        x = pal.space.encode(c)
+        pal.tell(c, np.array([1.0 + x.sum(), 2.0 - x[0]])
+                 + 0.01 * rng.random(2))
+
+
+def test_pal_mean_only_skips_variance_for_classified_points():
+    space = small_space(n_fps=8)              # 16 points: pools recycle fast
+    pal = PAL(space, seed=0, n_init=4, pool_size=12, beta=0.5,
+              gp_mode="incremental")
+    _drive_pal(pal, 12)
+    assert pal._ruled_out                      # classification happened
+    assert pal.n_mean_only > 0                 # and re-entrants rode it
+    assert len(pal.history_x) == 12            # picks stayed valid
+
+
+def test_pal_mean_only_off_matches_shape():
+    space = small_space(n_fps=8)
+    pal = PAL(space, seed=0, n_init=4, pool_size=12, beta=0.5,
+              gp_mode="incremental", mean_only=False)
+    _drive_pal(pal, 12)
+    assert pal.n_mean_only == 0 and not pal._ruled_out
+    assert len(pal.history_x) == 12
