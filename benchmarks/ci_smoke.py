@@ -40,6 +40,16 @@ the median per-pair rr/affinity wall ratio vs
 benchmarks.run fleetpath``).  No persistent cache is involved, so every
 rep pays identical cold compiles and the ratio isolates placement.
 
+A fourth row gates the **big-n jax search path** (PR 6's tentpole): the
+per-cycle (tell+ask) cost ratio between two observation-count checkpoints
+both past the subset-of-data inducing threshold
+(``searchpath_bign_smoke_measure``: checkpoints 300/1200, inducing 256).
+The ratio gets a hard 2.0 cap (the flat-latency acceptance number) plus
+the usual tolerance check vs ``searchpath_bign_smoke_flat_ratio`` in the
+baseline (lower is better, so the gate is a ceiling).  When jax is not
+importable the gate prints a note and passes — the numpy path is the
+reference and CI must stay green without the accelerator stack.
+
 Env knobs: SMOKE_SAMPLES (default 50), SMOKE_TOLERANCE (default 0.30),
 SMOKE_BASELINE (absolute evals/sec gate override for the evalpath row).
 """
@@ -50,6 +60,7 @@ import sys
 from benchmarks.common import (REPO, evalpath_workload,
                                fleetpath_smoke_measure,
                                fleetpath_smoke_workload,
+                               searchpath_bign_smoke_measure,
                                searchpath_smoke_measure, smoke_measure)
 
 N = int(os.environ.get("SMOKE_SAMPLES", "50"))
@@ -170,13 +181,47 @@ def fleetpath_gate(baseline) -> int:
     return 0 if ratio >= floor else 1
 
 
+def searchpath_bign_gate(baseline) -> int:
+    try:
+        from repro.core.search import gp_jax  # noqa: F401
+    except Exception as e:
+        print(f"smoke: big-n jax gate skipped — jax unavailable ({e})")
+        return 0
+    ratio = searchpath_bign_smoke_measure()
+    print(f"smoke: big-n jax flat ratio {ratio:.2f} (tell+ask cost at "
+          f"n=1200 vs n=300, inducing 256 — both past the threshold)")
+    if ratio > 2.0:
+        print(f"smoke: big-n hard cap FAIL — {ratio:.2f} > 2.0 (ask cost "
+              f"is not flat past the inducing threshold)")
+        return 1
+
+    try:
+        base = float(baseline["searchpath_bign_smoke_flat_ratio"])
+    except (KeyError, ValueError):
+        print("smoke: no checked-in big-n baseline — passing "
+              "(SMOKE_RECORD=1 benchmarks.run searchpath records one)")
+        return 0
+
+    # a healthy flat path records a baseline near 1.0, where ±30% relative
+    # is only ~0.3 absolute — too tight for a ms-scale ratio on a loaded
+    # runner.  Floor the ceiling at 1.5: still far under the 2.0 cap, and
+    # a regression back to unbounded growth blows past both.
+    ceiling = max(base * (1.0 + TOLERANCE), 1.5)
+    verdict = "ok" if ratio <= ceiling else "REGRESSION"
+    print(f"smoke: big-n ratio gate {ratio:.2f} vs ceiling {ceiling:.2f} "
+          f"(baseline ratio {base:.2f}, tolerance {TOLERANCE:.0%}; lower "
+          f"is better) -> {verdict}")
+    return 0 if ratio <= ceiling else 1
+
+
 def main() -> int:
     space, jc, build = evalpath_workload()
     baseline = _load_baseline()
     rc = evalpath_gate(space, jc, build, baseline)
     rc_search = searchpath_gate(space, jc, build, baseline)
     rc_fleet = fleetpath_gate(baseline)
-    return rc or rc_search or rc_fleet
+    rc_bign = searchpath_bign_gate(baseline)
+    return rc or rc_search or rc_fleet or rc_bign
 
 
 if __name__ == "__main__":

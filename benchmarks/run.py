@@ -15,13 +15,16 @@ import os
 import sys
 import time
 
-from benchmarks.common import (RESULTS, ask_cost_curve, evalpath_workload,
-                               explore_generation, fleetpath_smoke_measure,
+from benchmarks.common import (RESULTS, ask_cost_curve, bign_ask_curve,
+                               evalpath_workload, explore_generation,
+                               fleetpath_smoke_measure,
                                fleetpath_smoke_workload, fleetpath_workload,
-                               record_smoke_baseline, run_evalpath,
-                               run_fleetpath, run_hostpath, run_searchpath,
-                               scatter_png, searchpath_smoke_measure,
-                               smoke_measure, sync_picks_identical)
+                               jax_numpy_ehvi_equiv, record_smoke_baseline,
+                               run_evalpath, run_fleetpath, run_hostpath,
+                               run_searchpath, scatter_png,
+                               searchpath_bign_smoke_measure,
+                               searchpath_smoke_measure, smoke_measure,
+                               sync_picks_identical)
 
 N_SAMPLES = int(os.environ.get("BENCH_SAMPLES", "200"))
 
@@ -234,6 +237,47 @@ def bench_searchpath():
     for k in cks:
         row[f"searchpath_ask_ms_refit_n{k}"] = round(curve_r[k], 3)
         row[f"searchpath_ask_ms_incremental_n{k}"] = round(curve_i[k], 3)
+
+    # big-n jax fast path: flat ask latency past the inducing threshold,
+    # plus fused-EHVI equivalence to the numpy reference.  Skipped (with a
+    # note) when jax is not importable — the numpy path is the reference
+    # and must keep benchmarking without it.
+    try:
+        import repro.core.search.gp_jax  # noqa: F401
+        have_jax = True
+    except Exception as e:
+        have_jax = False
+        print(f"#   gp_mode=jax big-n arm skipped (jax unavailable: {e})")
+    if have_jax:
+        curve_j = bign_ask_curve("jax", checkpoints=(1000, 5000))
+        flat = curve_j[5000] / max(curve_j[1000], 1e-9)
+        maxdiff, picks_eq = jax_numpy_ehvi_equiv()
+        print(f"#   jax (inducing) tell+ask ms: n=1000 {curve_j[1000]:.2f}, "
+              f"n=5000 {curve_j[5000]:.2f} -> flat ratio {flat:.2f} "
+              f"(acceptance <= 2.0)")
+        print(f"#   jax-vs-numpy EHVI maxdiff {maxdiff:.2e} at n=500 "
+              f"(argmax picks equal = {picks_eq})")
+        if flat > 2.0:
+            raise RuntimeError(
+                f"jax big-n ask latency is not flat: n5000/n1000 = "
+                f"{flat:.2f} > 2.0 — inducing points are not bounding the "
+                f"per-ask cost")
+        if maxdiff > 1e-6 or not picks_eq:
+            raise RuntimeError(
+                f"fused jax EHVI diverges from the numpy staircase "
+                f"(maxdiff {maxdiff:.2e}, picks equal = {picks_eq})")
+        row.update({
+            "searchpath_n5k_ask_ms_n1000": round(curve_j[1000], 3),
+            "searchpath_n5k_ask_ms_n5000": round(curve_j[5000], 3),
+            "searchpath_n5k_flat_ratio": round(flat, 3),
+            "searchpath_jax_ehvi_maxdiff": maxdiff,
+        })
+        if os.environ.get("SMOKE_RECORD"):
+            bign_ratio = searchpath_bign_smoke_measure()
+            baseline_path = record_smoke_baseline({
+                "searchpath_bign_smoke_flat_ratio": round(bign_ratio, 3)})
+            print(f"#   searchpath big-n smoke baseline recorded "
+                  f"(flat ratio {bign_ratio:.2f}) -> {baseline_path}")
     return wall_a / n * 1e6, speedup, row
 
 

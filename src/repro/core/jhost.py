@@ -73,6 +73,7 @@ class JHost:
                 fingerprint_fn=None,
                 client_cache_size: int = 64,
                 speculate_frac: Optional[float] = None,
+                speculate_slow_mult: Optional[float] = None,
                 pipeline_depth: Optional[int] = None,
                 scheduler: Optional[DispatchScheduler] = None) -> ResultStore:
         sched = scheduler if scheduler is not None else DispatchScheduler(
@@ -83,7 +84,9 @@ class JHost:
                             else chunk_budget_ms / 1e3),
             affinity=affinity, fingerprint_fn=fingerprint_fn,
             client_cache_size=client_cache_size,
-            speculate_frac=speculate_frac, pipeline_depth=pipeline_depth)
+            speculate_frac=speculate_frac,
+            speculate_slow_mult=speculate_slow_mult,
+            pipeline_depth=pipeline_depth)
         self.scheduler = sched
         self.quarantined = sched.quarantined   # shared set, stays live
         sched.wire_stats_fn = getattr(self.transport, "wire_summary", None)
@@ -95,11 +98,24 @@ class JHost:
         # loop cannot otherwise progress
         poll_ask = getattr(search, "poll_ask", None)
         note_demand = getattr(search, "note_demand", None)
+        # shadow-aware pools: with a fingerprint_fn the searcher learns which
+        # sw fingerprints are resident in the fleet's cache shadows and
+        # biases its candidate pools toward them (no-ops for searchers
+        # without the hooks)
+        note_residency = None
+        if fingerprint_fn is not None:
+            set_fp_fn = getattr(search, "set_sw_fingerprint_fn", None)
+            if set_fp_fn is not None:
+                set_fp_fn(lambda knobs, _a=arch, _s=shape:
+                          fingerprint_fn(TestConfig(-1, _a, _s, knobs)))
+            note_residency = getattr(search, "note_residency", None)
 
         while completed < n_samples:
             # top up the pending queue with fresh asks, then fill pipelines
             want = min(n_samples - issued, sched.want())
             if want > 0:
+                if note_residency is not None:
+                    note_residency(sched.resident_fingerprints())
                 if poll_ask is not None:
                     if note_demand is not None:
                         note_demand(min(n_samples - issued,

@@ -74,6 +74,13 @@ re-queueing them.  The losing client may still be computing the cancelled
 chunk, so its next EWMA observation can read slightly slow — the price of
 never waiting out a full deadline on a straggler.
 
+With ``speculate_slow_mult`` set (independently of ``speculate_frac``),
+chunks still *queued* — not yet started — behind a client whose per-config
+EWMA exceeds that multiple of the median of the other healthy clients'
+EWMAs are mirrored too ("queued" kind): the slow client has not begun them,
+so a copy elsewhere is pure insurance.  ``stats()`` reports the queued-kind
+dispatch and win counters separately (``spec_queued*``).
+
 The scheduler is transport-free and clock-injectable: the host pushes the
 chunks ``next_dispatches()`` returns, feeds every pulled result to
 ``on_result()``, and calls ``expire()`` each poll; unit tests drive the same
@@ -166,7 +173,8 @@ class Chunk:
     """One dispatched chunk: owner, deadline, and unanswered config_ids."""
 
     __slots__ = ("chunk_id", "client", "deadline", "awaiting", "size",
-                 "started_at", "started_seq", "fps", "mirror_id", "mirror_of")
+                 "started_at", "started_seq", "fps", "mirror_id", "mirror_of",
+                 "spec_kind")
 
     def __init__(self, chunk_id: int, client: int, deadline: float,
                  awaiting: Set[int], started_at: Optional[float]):
@@ -189,6 +197,10 @@ class Chunk:
         # versa; both awaiting sets shrink in lockstep (first answer wins)
         self.mirror_id: Optional[int] = None    # set on the primary
         self.mirror_of: Optional[int] = None    # set on the mirror
+        # why a mirror exists: "deadline" (speculate_frac on a running head)
+        # or "queued" (speculate_slow_mult on a not-yet-started chunk queued
+        # behind a very slow client) — routes win/cancel counters
+        self.spec_kind: Optional[str] = None    # set on the mirror
 
 
 class ClientSlot:
@@ -237,6 +249,7 @@ class DispatchScheduler:
                                                    Hashable]] = None,
                  client_cache_size: int = 64,
                  speculate_frac: Optional[float] = None,
+                 speculate_slow_mult: Optional[float] = None,
                  pipeline_depth: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic):
         if policy not in POLICIES:
@@ -250,6 +263,9 @@ class DispatchScheduler:
         if speculate_frac is not None and not 0.0 < speculate_frac <= 1.0:
             raise ValueError(f"speculate_frac must be in (0, 1], "
                              f"got {speculate_frac!r}")
+        if speculate_slow_mult is not None and speculate_slow_mult <= 1.0:
+            raise ValueError(f"speculate_slow_mult must be > 1.0, "
+                             f"got {speculate_slow_mult!r}")
         if pipeline_depth is not None:
             depth = int(pipeline_depth)
             if depth < 1:
@@ -266,6 +282,7 @@ class DispatchScheduler:
         self.affinity = affinity
         self.fingerprint_fn = fingerprint_fn
         self.speculate_frac = speculate_frac
+        self.speculate_slow_mult = speculate_slow_mult
         self.clock = clock
         # before any EWMA exists: the static batch_size, or a modest seed
         # chunk when only a budget was given (it adapts from there)
@@ -284,10 +301,13 @@ class DispatchScheduler:
         self.n_fp_chunks = 0        # chunks whose fingerprints were known
         self.n_affine_chunks = 0    # ... placed on a client already holding
         #                             their leading fingerprint
-        self.n_speculated = 0       # mirror chunks dispatched
+        self.n_speculated = 0       # mirror chunks dispatched (all kinds)
         self.n_spec_wins_primary = 0
         self.n_spec_wins_mirror = 0
         self.n_spec_cancelled = 0   # losing twins cancelled host-side
+        self.n_spec_queued = 0      # queued-chunk mirrors (slow-client kind)
+        self.n_spec_queued_wins_primary = 0
+        self.n_spec_queued_wins_mirror = 0
         # optional wire-stats source (the host attaches its transport's
         # ``wire_summary``); merged into stats() — the scheduler itself
         # stays transport-free
@@ -334,7 +354,8 @@ class DispatchScheduler:
         insurance rides the same push the fresh work does.
         """
         out: List[Tuple[int, List[TestConfig]]] = []
-        if self.speculate_frac is not None:
+        if self.speculate_frac is not None or \
+                self.speculate_slow_mult is not None:
             out.extend(self._speculative_dispatches())
         if not self.pending or not any(
                 s.open_chunks() for s in self.slots.values()):
@@ -480,54 +501,109 @@ class DispatchScheduler:
 
     # -- speculation ----------------------------------------------------------
     def _speculative_dispatches(self) -> List[Tuple[int, List[TestConfig]]]:
-        """Mirror running head chunks that burned ``speculate_frac`` of their
-        deadline budget onto a second client (shadow-affine, else least
-        loaded).  First answer wins; see ``_cancel_twin``."""
+        """Mirror chunks at risk onto a second client (shadow-affine, else
+        least loaded).  Two triggers, independently enabled: a *running*
+        head chunk that burned ``speculate_frac`` of its deadline budget
+        ("deadline" kind), and chunks still *queued* (not yet started)
+        behind a client whose per-config EWMA exceeds
+        ``speculate_slow_mult`` × the median of the other healthy clients'
+        EWMAs ("queued" kind — the work hasn't begun, so moving a copy is
+        pure insurance, not a race against sunk cost).  First answer wins;
+        see ``_cancel_twin``."""
         now = self.clock()
         out: List[Tuple[int, List[TestConfig]]] = []
-        for slot in self.slots.values():
-            if slot.quarantined or not slot.chunks:
-                continue
-            head = self.chunks[slot.chunks[0]]
-            if (head.mirror_id is not None or head.mirror_of is not None
-                    or head.started_at is None or not head.awaiting):
-                continue
-            budget = head.deadline - head.started_at
-            if budget <= 0 or (now - head.started_at) < \
-                    self.speculate_frac * budget:
-                continue
-            target = self._mirror_target(slot, head)
-            if target is None:
-                continue
-            # mirror only what is still unanswered AND in flight: a cid the
-            # owner still awaits but a late straggler already answered is
-            # not re-sent, so it must not be awaited from the mirror either
-            # (it could never answer it — the chunk would hang forever)
-            tcs = [self.inflight[c]["tc"] for c in sorted(head.awaiting)
-                   if c in self.inflight]
-            if not tcs:
-                continue
-            mirror_id = next(self._chunk_ids)
-            if target.chunks:
-                base = max(now, self.chunks[target.chunks[-1]].deadline)
-                started = None
-            else:
-                base = now
-                started = now
-            mirror = Chunk(mirror_id, target.client_id,
-                           deadline=base + self.timeout_s * len(tcs),
-                           awaiting={tc.config_id for tc in tcs},
-                           started_at=started)
-            mirror.mirror_of = head.chunk_id
-            mirror.fps = list(head.fps)
-            head.mirror_id = mirror_id
-            self.chunks[mirror_id] = mirror
-            target.chunks.append(mirror_id)
-            for fp in mirror.fps:
-                target.shadow.touch(fp, confirmed=False)
-            self.n_speculated += 1
-            out.append((target.client_id, tcs))
+        if self.speculate_frac is not None:
+            for slot in self.slots.values():
+                if slot.quarantined or not slot.chunks:
+                    continue
+                head = self.chunks[slot.chunks[0]]
+                if (head.mirror_id is not None or head.mirror_of is not None
+                        or head.started_at is None or not head.awaiting):
+                    continue
+                budget = head.deadline - head.started_at
+                if budget <= 0 or (now - head.started_at) < \
+                        self.speculate_frac * budget:
+                    continue
+                target = self._mirror_target(slot, head)
+                if target is None:
+                    continue
+                disp = self._mirror_chunk(head, target, now, "deadline")
+                if disp is not None:
+                    out.append(disp)
+        if self.speculate_slow_mult is not None:
+            out.extend(self._queued_speculative(now))
         return out
+
+    def _queued_speculative(self, now: float
+                            ) -> List[Tuple[int, List[TestConfig]]]:
+        """Mirror queued (not yet started) chunks of very slow clients."""
+        mult = self.speculate_slow_mult
+        out: List[Tuple[int, List[TestConfig]]] = []
+        healthy = [s for s in self.slots.values()
+                   if not s.quarantined and s.ewma_per_cfg_s is not None]
+        for slot in healthy:
+            if len(slot.chunks) < 2:
+                continue
+            # median of the OTHER healthy clients' EWMAs: with the slow slot
+            # excluded, a 2-client fleet still yields a sane reference (a
+            # plain all-slots median would sit between the two speeds)
+            others = sorted(s.ewma_per_cfg_s for s in healthy if s is not slot)
+            if not others:
+                continue
+            ref = others[len(others) // 2] if len(others) % 2 else \
+                0.5 * (others[len(others) // 2 - 1]
+                       + others[len(others) // 2])
+            if ref <= 0 or slot.ewma_per_cfg_s <= mult * ref:
+                continue
+            for chunk_id in list(slot.chunks[1:]):
+                chunk = self.chunks[chunk_id]
+                if (chunk.started_at is not None
+                        or chunk.mirror_id is not None
+                        or chunk.mirror_of is not None
+                        or not chunk.awaiting):
+                    continue
+                target = self._mirror_target(slot, chunk)
+                if target is None:
+                    return out             # fleet has no spare depth left
+                disp = self._mirror_chunk(chunk, target, now, "queued")
+                if disp is not None:
+                    self.n_spec_queued += 1
+                    out.append(disp)
+        return out
+
+    def _mirror_chunk(self, src: Chunk, target: ClientSlot, now: float,
+                      kind: str) -> Optional[Tuple[int, List[TestConfig]]]:
+        """Create and enqueue the speculative twin of ``src`` on ``target``.
+
+        Mirrors only what is still unanswered AND in flight: a cid the owner
+        still awaits but a late straggler already answered is not re-sent,
+        so it must not be awaited from the mirror either (it could never
+        answer it — the chunk would hang forever)."""
+        tcs = [self.inflight[c]["tc"] for c in sorted(src.awaiting)
+               if c in self.inflight]
+        if not tcs:
+            return None
+        mirror_id = next(self._chunk_ids)
+        if target.chunks:
+            base = max(now, self.chunks[target.chunks[-1]].deadline)
+            started = None
+        else:
+            base = now
+            started = now
+        mirror = Chunk(mirror_id, target.client_id,
+                       deadline=base + self.timeout_s * len(tcs),
+                       awaiting={tc.config_id for tc in tcs},
+                       started_at=started)
+        mirror.mirror_of = src.chunk_id
+        mirror.spec_kind = kind
+        mirror.fps = list(src.fps)
+        src.mirror_id = mirror_id
+        self.chunks[mirror_id] = mirror
+        target.chunks.append(mirror_id)
+        for fp in mirror.fps:
+            target.shadow.touch(fp, confirmed=False)
+        self.n_speculated += 1
+        return (target.client_id, tcs)
 
     def _mirror_target(self, owner: ClientSlot,
                        chunk: Chunk) -> Optional[ClientSlot]:
@@ -561,10 +637,18 @@ class DispatchScheduler:
                     succ.started_seq = self._pull_seq
         winner.mirror_id = winner.mirror_of = None
         self.n_spec_cancelled += 1
+        mirror = loser if loser.mirror_of is not None else winner
+        queued = mirror.spec_kind == "queued"
         if loser.mirror_of is not None:       # the mirror lost: primary won
-            self.n_spec_wins_primary += 1
+            if queued:
+                self.n_spec_queued_wins_primary += 1
+            else:
+                self.n_spec_wins_primary += 1
         else:
-            self.n_spec_wins_mirror += 1
+            if queued:
+                self.n_spec_queued_wins_mirror += 1
+            else:
+                self.n_spec_wins_mirror += 1
 
     # -- results --------------------------------------------------------------
     def note_results(self) -> None:
@@ -706,6 +790,16 @@ class DispatchScheduler:
         return terminal
 
     # -- introspection --------------------------------------------------------
+    def resident_fingerprints(self) -> Set[Hashable]:
+        """Union of sw fingerprints resident in healthy clients' shadows —
+        the fleet-level compile-residency snapshot a shadow-aware searcher
+        biases its candidate pools toward (``SearchAlgorithm.note_residency``)."""
+        out: Set[Hashable] = set()
+        for slot in self.slots.values():
+            if not slot.quarantined:
+                out.update(slot.shadow.keys())
+        return out
+
     def stuck(self) -> bool:
         """No work can ever complete: nothing in flight, everyone dead."""
         return (not self.chunks
@@ -729,11 +823,16 @@ class DispatchScheduler:
             s["affine_chunks"] = self.n_affine_chunks
             s["shadow_sizes"] = {c: len(sl.shadow)
                                  for c, sl in self.slots.items()}
-        if self.speculate_frac is not None:
+        if self.speculate_frac is not None or \
+                self.speculate_slow_mult is not None:
             s["speculated"] = self.n_speculated
             s["spec_wins_primary"] = self.n_spec_wins_primary
             s["spec_wins_mirror"] = self.n_spec_wins_mirror
             s["spec_cancelled"] = self.n_spec_cancelled
+        if self.speculate_slow_mult is not None:
+            s["spec_queued"] = self.n_spec_queued
+            s["spec_queued_wins_primary"] = self.n_spec_queued_wins_primary
+            s["spec_queued_wins_mirror"] = self.n_spec_queued_wins_mirror
         if self.wire_stats_fn is not None:
             try:
                 s.update(self.wire_stats_fn() or {})

@@ -2,8 +2,13 @@ from repro.core.search.base import SearchAlgorithm
 from repro.core.search.random_search import RandomSearch
 from repro.core.search.grid import GridSearch
 from repro.core.search.nsga2 import NSGA2
-from repro.core.search.bayesopt import BayesOpt, GP, IncrementalGP, PAL
+from repro.core.search.bayesopt import (BayesOpt, GP, IncrementalGP, PAL,
+                                        tune_lengthscale)
 from repro.core.search.driver import SearchDriver
+# JaxIncrementalGP is intentionally NOT imported here: gp_jax imports jax at
+# module load, and the numpy search stack must keep working without it —
+# use ``from repro.core.search.gp_jax import JaxIncrementalGP`` (or
+# ``gp_mode="jax"``, which imports it lazily).
 from repro.core.search.hypervolume import hypervolume, hypervolume_2d, hypervolume_3d
 
 ALGORITHMS = {

@@ -3,23 +3,36 @@
 ask/tell protocol: ``ask(n)`` returns up to n knob dicts to evaluate (batched,
 so multi-client JHosts keep every board busy); ``tell(knobs, y)`` reports the
 objective vector (always minimised).
+
+Shadow-aware candidate pools: when the fleet scheduler exposes which sw
+fingerprints its clients already hold compiled (``note_residency``), a
+``residency_bias`` fraction of every ``_fresh_pool`` sample has its sw
+columns overwritten with an already-resident sw combination before dedup —
+the searcher keeps exploring the hw ladder freely but stops proposing
+compile storms.  With no residency reported (the default) the sampling path
+and rng stream are bit-identical to before.
 """
 from __future__ import annotations
 
 import abc
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.space import DesignSpace
+from repro.core.space import DesignSpace, KIND_SW
 
 
 class SearchAlgorithm(abc.ABC):
-    def __init__(self, space: DesignSpace, seed: int = 0):
+    def __init__(self, space: DesignSpace, seed: int = 0,
+                 residency_bias: float = 0.5):
         self.space = space
         self.rng = np.random.default_rng(seed)
         self.history_x: List[Dict] = []
         self.history_y: List[np.ndarray] = []
+        self.residency_bias = residency_bias
+        self._sw_fp_fn: Optional[Callable[[Dict], object]] = None
+        self._resident_fps: frozenset = frozenset()
+        self._fp_to_sw: Dict[object, np.ndarray] = {}
 
     @abc.abstractmethod
     def ask(self, n: int) -> List[Dict]:
@@ -28,6 +41,41 @@ class SearchAlgorithm(abc.ABC):
     def tell(self, knobs: Dict, y: np.ndarray) -> None:
         self.history_x.append(dict(knobs))
         self.history_y.append(np.asarray(y, float))
+        if self._sw_fp_fn is not None:
+            fp = self._sw_fp_fn(knobs)
+            if fp not in self._fp_to_sw:
+                self._fp_to_sw[fp] = \
+                    self.space.index_encode(knobs)[self._sw_cols()]
+
+    # -- shadow-aware pools --------------------------------------------------
+    def set_sw_fingerprint_fn(self, fn: Optional[Callable[[Dict], object]]
+                              ) -> None:
+        """Install the knobs→sw-fingerprint map (the fleet's cache key), so
+        tells can record which sw index combination each fingerprint is."""
+        self._sw_fp_fn = fn
+
+    def note_residency(self, fps: Iterable) -> None:
+        """Update the set of sw fingerprints currently compiled somewhere in
+        the fleet (union of healthy clients' cache shadows)."""
+        self._resident_fps = frozenset(fps)
+
+    def _sw_cols(self) -> np.ndarray:
+        if not hasattr(self, "_sw_cols_cache"):
+            self._sw_cols_cache = np.asarray(
+                [i for i, k in enumerate(self.space.knobs)
+                 if k.kind == KIND_SW], np.int64)
+        return self._sw_cols_cache
+
+    def _resident_sw_combos(self) -> Optional[np.ndarray]:
+        """(R, n_sw) index rows for resident fingerprints we have seen told,
+        in deterministic (sorted-by-repr) order; None when biasing cannot
+        engage."""
+        if not self._resident_fps or not self._fp_to_sw:
+            return None
+        rows = [self._fp_to_sw[fp]
+                for fp in sorted(self._resident_fps & self._fp_to_sw.keys(),
+                                 key=repr)]
+        return np.stack(rows) if rows else None
 
     # -- helpers -------------------------------------------------------------
     def _key(self, knobs: Dict) -> tuple:
@@ -73,8 +121,16 @@ class SearchAlgorithm(abc.ABC):
 
         A nearly-exhausted space cannot fill the pool: after ``max_rounds``
         the partial pool is returned instead of spinning forever.
+
+        Residency biasing (see module docstring): when resident sw combos
+        are known, the first ``residency_bias`` fraction of each round's
+        sample keeps its hw columns but adopts a resident sw combo, before
+        dedup — so biased duplicates still collapse and the pool stays
+        distinct.  The extra rng draws happen only when biasing engages.
         """
         exclude = exclude if exclude is not None else set()
+        combos = self._resident_sw_combos()
+        sw_cols = self._sw_cols() if combos is not None else None
         have: Set[int] = set()
         picked_idx: List[np.ndarray] = []
         n_picked = 0
@@ -85,6 +141,11 @@ class SearchAlgorithm(abc.ABC):
             # mild oversampling keeps the round count low once duplicates
             # against `exclude` become common late in a run
             idx = self.space.sample_index_batch(self.rng, need + (need >> 1) + 4)
+            if combos is not None and len(sw_cols):
+                nb = int(len(idx) * self.residency_bias)
+                if nb:
+                    pick = self.rng.integers(0, len(combos), nb)
+                    idx[:nb][:, sw_cols] = combos[pick]
             flats = self._flat_keys(idx)
             _, first = np.unique(flats, return_index=True)
             take = []

@@ -21,8 +21,21 @@ Cholesky buffers with a rank-append update, O(n²) per new observation.  The
 factor is cached across asks and invalidated only by new data, so an ask is
 pure O(n²·pool) BLAS.  ``gp_mode="refit"`` keeps the per-ask refactor (the
 pre-incremental path, retained for benchmarking and equivalence tests).
+``gp_mode="jax"`` moves the same incremental layout onto the accelerator
+(``repro.core.search.gp_jax.JaxIncrementalGP``): jitted donated-buffer
+rank-appends, fused pool scoring in one device call, and a subset-of-data
+inducing-point approximation past ``inducing_threshold`` points so ask
+latency stays flat at 10⁴+ observations.  The numpy path is the reference;
+the jax path matches it to float64 round-off while the active set is exact.
 Candidate pools come from the vectorized ``SearchAlgorithm._fresh_pool``
 (one ``sample_index_batch`` sweep, no config-at-a-time Python loop).
+
+Hyperparameter refresh (``hyper_refresh_every=k``, any mode): every k tells
+the RBF lengthscale is re-tuned on a strided subsample (median-distance
+heuristic candidates scored by Gaussian log marginal likelihood —
+``tune_lengthscale``) and the live factor is rebuilt *in place* via
+``set_lengthscale`` — one refactor riding the existing buffers, not a
+rebuild of the searcher.
 """
 from __future__ import annotations
 
@@ -35,7 +48,71 @@ from repro.core.search.base import SearchAlgorithm
 from repro.core.search.hypervolume import hypervolume_2d
 from repro.core.results import nondominated_mask
 
-GP_MODES = ("incremental", "refit")
+GP_MODES = ("incremental", "refit", "jax")
+
+DEFAULT_LENGTHSCALE = 0.3
+
+
+def _make_surrogate(gp_mode: str, inducing_threshold: Optional[int]):
+    """The persistent surrogate for a searcher: numpy incremental buffers, or
+    the device-resident jax twin (imported lazily so jax-less environments
+    can still use the numpy modes)."""
+    if gp_mode == "jax":
+        from repro.core.search.gp_jax import JaxIncrementalGP
+
+        return JaxIncrementalGP(inducing_threshold=inducing_threshold)
+    return IncrementalGP()
+
+
+def tune_lengthscale(xs: np.ndarray, ys: np.ndarray, current: float,
+                     noise: float = 1e-3, signal: float = 1.0,
+                     max_points: int = 256) -> float:
+    """Re-tune the RBF lengthscale on a strided subsample, deterministically.
+
+    Candidates are the median positive pairwise distance of the subsample and
+    its half/double (plus the incumbent); each is scored by the Gaussian log
+    marginal likelihood summed over per-column-standardized target columns,
+    so the schedule needs no gradient machinery and costs one small O(m³)
+    factorisation per candidate (m ≤ ``max_points``).  Returns the incumbent
+    unchanged when there is too little data to score.
+    """
+    xs = np.asarray(xs, float)
+    ys = np.asarray(ys, float)
+    if ys.ndim == 1:
+        ys = ys[:, None]
+    n = len(xs)
+    if n < 4:
+        return float(current)
+    sel = np.unique(np.linspace(0, n - 1, min(n, max_points)).round()
+                    .astype(int))
+    x, Y = xs[sel], ys[sel]
+    m = len(x)
+    sq = np.einsum("ij,ij->i", x, x)
+    d2 = np.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    pos = d2[np.triu_indices(m, 1)]
+    pos = pos[pos > 0]
+    if not len(pos):
+        return float(current)
+    med = float(np.sqrt(np.median(pos)))
+    cands = sorted({round(float(c), 6)
+                    for c in (current, 0.5 * med, med, 2.0 * med)
+                    if c > 1e-6})
+    std = Y.std(axis=0)
+    yn = (Y - Y.mean(axis=0)) / np.where(std > 0, std, 1.0)
+    best_ls, best_ml = float(current), -np.inf
+    for ls in cands:
+        k = signal * np.exp(-0.5 * d2 / ls ** 2) + noise * np.eye(m)
+        try:
+            L = np.linalg.cholesky(k)
+        except np.linalg.LinAlgError:
+            continue
+        a = np.linalg.solve(L, yn)
+        # log ML up to constants: -½ yᵀK⁻¹y - J·log|L|, summed over columns
+        ml = (-0.5 * float(np.sum(a * a))
+              - Y.shape[1] * float(np.sum(np.log(np.diag(L)))))
+        if ml > best_ml:
+            best_ml, best_ls = ml, ls
+    return best_ls
 
 
 class GP:
@@ -83,6 +160,13 @@ class GP:
         v = np.linalg.solve(self._l, ks.T)
         var = np.clip(self.signal - np.sum(v * v, axis=0), 1e-9, None)
         return mu * self._ys + self._ym, np.sqrt(var) * self._ys
+
+    def set_lengthscale(self, ls: float) -> "GP":
+        """Adopt a re-tuned lengthscale; refactors in place if already fit."""
+        self.ls = float(ls)
+        if self._x is not None:
+            self.fit_x(self._x)
+        return self
 
 
 class IncrementalGP(GP):
@@ -233,6 +317,22 @@ class IncrementalGP(GP):
         EHVI scoring (means-greedy) never uses."""
         return self._k(xs, self._x) @ self._alpha_m * self._ys_m + self._ym_m
 
+    def set_lengthscale(self, ls: float) -> "IncrementalGP":
+        """Adopt a re-tuned lengthscale riding the existing buffers: the
+        stored kernel matrix is recomputed in place and refactored once —
+        no searcher rebuild, no buffer reallocation."""
+        ls = float(ls)
+        if ls == self.ls:
+            return self
+        self.ls = ls
+        n = self._n
+        if n:
+            self._kb[:n, :n] = (self._k(self._xb[:n], self._xb[:n])
+                                + self.noise * np.eye(n))
+            self._refactor()
+            self._sync_views()
+        return self
+
 
 # ---------------------------------------------------------------------------
 # normal CDF/PDF — pure numpy, no per-ask scipy import on the hot path
@@ -310,7 +410,9 @@ def _ehvi_improvements_loop(ys: np.ndarray, ref: np.ndarray,
 class BayesOpt(SearchAlgorithm):
     def __init__(self, space, seed: int = 0, n_init: int = 12,
                  pool_size: int = 512, strategy: str = "parego",
-                 gp_mode: str = "incremental"):
+                 gp_mode: str = "incremental",
+                 hyper_refresh_every: Optional[int] = None,
+                 inducing_threshold: Optional[int] = 5000):
         super().__init__(space, seed)
         self.n_init = n_init
         self.pool_size = pool_size
@@ -318,18 +420,41 @@ class BayesOpt(SearchAlgorithm):
         assert gp_mode in GP_MODES
         self.strategy = strategy
         self.gp_mode = gp_mode
-        self._gp = IncrementalGP()
+        self.hyper_refresh_every = hyper_refresh_every
+        self._gp = _make_surrogate(gp_mode, inducing_threshold)
         self._gp_pending: List[np.ndarray] = []
         self._front_y: Optional[np.ndarray] = None   # maintained Pareto front
         self._seen = set()
+        self._ls = DEFAULT_LENGTHSCALE        # refit-mode tuned lengthscale
+        self._last_refresh = 0
+        self.n_hyper_refreshes = 0
 
     def tell(self, knobs: Dict, y: np.ndarray) -> None:
         super().tell(knobs, y)
-        if self.gp_mode == "incremental":
+        if self.gp_mode in ("incremental", "jax"):
             # queued for a single block rank-append at the next ask boundary
             # (one O(n²·m) BLAS append for m tells instead of m tiny ones)
             self._gp_pending.append(self.space.encode(knobs))
             self._update_front(np.asarray(y, float))
+
+    def _maybe_refresh(self, gp, ys: np.ndarray):
+        """The hyperparameter refresh schedule: every ``hyper_refresh_every``
+        tells, re-tune the lengthscale and rebuild the live factor in place
+        (``set_lengthscale``); refit mode carries the tuned value into its
+        next per-ask factorisation instead."""
+        every = self.hyper_refresh_every
+        if not every or len(self.history_x) - self._last_refresh < every:
+            return gp
+        self._last_refresh = len(self.history_x)
+        current = self._ls if self.gp_mode == "refit" else gp.ls
+        ls = tune_lengthscale(self.observed_points(), ys, current)
+        self.n_hyper_refreshes += 1
+        if self.gp_mode == "refit":
+            if ls != self._ls:
+                self._ls = ls
+                return GP(lengthscale=ls).fit_x(self.observed_points())
+            return gp
+        return gp.set_lengthscale(ls)
 
     def _update_front(self, y: np.ndarray) -> None:
         """O(front) incremental Pareto update, so EHVI asks never rescan all
@@ -351,12 +476,12 @@ class BayesOpt(SearchAlgorithm):
         rank-append over the tells since the last ask, invalidated only by
         new data — or, in refit mode, a fresh O(n³) factorisation (the
         pre-incremental path, kept for benchmarking and equivalence)."""
-        if self.gp_mode == "incremental":
+        if self.gp_mode in ("incremental", "jax"):
             if self._gp_pending:
                 self._gp.observe(np.stack(self._gp_pending))
                 self._gp_pending.clear()
             return self._gp
-        return GP().fit_x(self.observed_points())
+        return GP(lengthscale=self._ls).fit_x(self.observed_points())
 
     def _scalarise(self, ys: np.ndarray) -> np.ndarray:
         lo, hi = ys.min(0), ys.max(0)
@@ -394,6 +519,7 @@ class BayesOpt(SearchAlgorithm):
 
         idx, xp, flats = self._fresh_pool(self.pool_size, exclude=self._seen)
         gp = self._surrogate()   # one cached/derived factor for every pick
+        gp = self._maybe_refresh(gp, ys)
 
         if self.strategy == "ehvi" and ys.shape[1] == 2:
             # posterior means per objective (shared factor), then one
@@ -401,7 +527,13 @@ class BayesOpt(SearchAlgorithm):
             # scores do not change between picks, so the n picks are simply
             # the n best-scoring unseen candidates
             ref = ys.max(0) * 1.1 + 1e-9
-            if self.gp_mode == "incremental":
+            if self.gp_mode == "jax":
+                # fully fused on device: kernel GEMM, posterior means, and
+                # the staircase sweep happen in one jit call — no (M, 2)
+                # means matrix ever lands on the host
+                gp.fit_y_multi(ys)
+                score = gp.score_ehvi(xp, self._front_y, ref)
+            elif self.gp_mode == "incremental":
                 # one mean-only kernel sweep for both objectives, scored
                 # against the maintained front (same staircase as passing
                 # all of ys: ehvi reduces to the nondominated set anyway)
@@ -458,7 +590,9 @@ class PAL(SearchAlgorithm):
 
     def __init__(self, space, seed: int = 0, n_init: int = 12,
                  pool_size: int = 512, beta: float = 1.8,
-                 gp_mode: str = "incremental", mean_only: bool = True):
+                 gp_mode: str = "incremental", mean_only: bool = True,
+                 hyper_refresh_every: Optional[int] = None,
+                 inducing_threshold: Optional[int] = 5000):
         super().__init__(space, seed)
         self.n_init = n_init
         self.pool_size = pool_size
@@ -466,17 +600,23 @@ class PAL(SearchAlgorithm):
         assert gp_mode in GP_MODES
         self.gp_mode = gp_mode
         self.mean_only = mean_only
-        self._gp = IncrementalGP()
+        self.hyper_refresh_every = hyper_refresh_every
+        self._gp = _make_surrogate(gp_mode, inducing_threshold)
         self._gp_pending: List[np.ndarray] = []
         self._seen = set()
         self._ruled_out: set = set()          # flat keys classified not-Pareto
         self._ruled_out_arr: Optional[np.ndarray] = None
         self.n_mean_only = 0
+        self._ls = DEFAULT_LENGTHSCALE        # refit-mode tuned lengthscale
+        self._last_refresh = 0
+        self.n_hyper_refreshes = 0
 
     def tell(self, knobs: Dict, y: np.ndarray) -> None:
         super().tell(knobs, y)
-        if self.gp_mode == "incremental":
+        if self.gp_mode in ("incremental", "jax"):
             self._gp_pending.append(self.space.encode(knobs))
+
+    _maybe_refresh = BayesOpt._maybe_refresh
 
     def _classified_mask(self, flats: np.ndarray) -> np.ndarray:
         if not self._ruled_out:
@@ -501,11 +641,11 @@ class PAL(SearchAlgorithm):
 
         idx, xp, flats = self._fresh_pool(self.pool_size, exclude=self._seen)
         # shared (cached in incremental mode) factor across per-objective fits
-        if self.gp_mode == "incremental":
+        if self.gp_mode in ("incremental", "jax"):
             if self._gp_pending:
                 self._gp.observe(np.stack(self._gp_pending))
                 self._gp_pending.clear()
-            gp = self._gp.fit_y_multi(ys)
+            gp = self._maybe_refresh(self._gp, ys).fit_y_multi(ys)
             known = (self._classified_mask(flats)
                      if self.mean_only else np.zeros(len(flats), bool))
             if known.any():
@@ -522,7 +662,8 @@ class PAL(SearchAlgorithm):
                 mu, sig = gp.predict_multi(xp)
         else:
             known = np.zeros(len(flats), bool)
-            gp = GP().fit_x(self.observed_points())
+            gp = GP(lengthscale=self._ls).fit_x(self.observed_points())
+            gp = self._maybe_refresh(gp, ys)
             mus, sigs = [], []
             for j in range(ys.shape[1]):
                 m, s = gp.fit_y(ys[:, j]).predict(xp)
@@ -532,7 +673,7 @@ class PAL(SearchAlgorithm):
             sig = np.stack(sigs, 1)
         lcb = mu - self.beta * sig
         maybe = pal_maybe_pareto(ys, lcb)
-        if self.mean_only and self.gp_mode == "incremental":
+        if self.mean_only and self.gp_mode in ("incremental", "jax"):
             # a full-posterior LCB box found dominated is a permanent
             # classification (the ε-PAL discard step)
             for f in flats[~maybe & ~known]:

@@ -74,6 +74,11 @@ class SearchDriver:
         self.n_precomputed = 0     # configs ever placed in the buffer
         self.n_tells_folded = 0    # buffered tells folded into the algo
         self.n_stale_dropped = 0   # precomputed picks discarded as too stale
+        # residency updates are buffered like tells: the worker owns the
+        # algorithm, so the host thread never touches it directly (latest
+        # update wins — residency is a snapshot, not a log)
+        self._pending_fp_fn: Optional[Tuple] = None
+        self._pending_residency: Optional[frozenset] = None
         self._worker: Optional[threading.Thread] = None
         if mode == "async":
             self._worker = threading.Thread(target=self._run, daemon=True,
@@ -122,6 +127,27 @@ class SearchDriver:
             if out:
                 self._cond.notify_all()        # buffer has room: refill
             return out
+
+    def set_sw_fingerprint_fn(self, fn) -> None:
+        """Forward the knobs→sw-fingerprint map to the wrapped algorithm
+        (inline in sync mode; via the worker in async mode)."""
+        if self.mode == "sync":
+            if hasattr(self.algo, "set_sw_fingerprint_fn"):
+                self.algo.set_sw_fingerprint_fn(fn)
+            return
+        with self._cond:
+            self._pending_fp_fn = (fn,)
+            self._cond.notify_all()
+
+    def note_residency(self, fps) -> None:
+        """Forward the fleet's resident-fingerprint snapshot (latest wins)."""
+        if self.mode == "sync":
+            if hasattr(self.algo, "note_residency"):
+                self.algo.note_residency(fps)
+            return
+        with self._cond:
+            self._pending_residency = frozenset(fps)
+            self._cond.notify_all()
 
     def note_demand(self, n: int) -> None:
         """Backpressure from the scheduler: keep ~n picks precomputed."""
@@ -173,6 +199,9 @@ class SearchDriver:
                     return
                 tells = list(self._tells)
                 self._tells.clear()
+                fp_fn, self._pending_fp_fn = self._pending_fp_fn, None
+                residency, self._pending_residency = \
+                    self._pending_residency, None
                 if self.max_stale_tells is not None and self._buf:
                     # discard (oldest-first: bases are monotone) only the
                     # picks that will lag the model by more than the bound
@@ -192,6 +221,12 @@ class SearchDriver:
             try:
                 # fold buffered observations at the ask boundary, then
                 # precompute the next round while clients keep evaluating
+                if fp_fn is not None and \
+                        hasattr(self.algo, "set_sw_fingerprint_fn"):
+                    self.algo.set_sw_fingerprint_fn(fp_fn[0])
+                if residency is not None and \
+                        hasattr(self.algo, "note_residency"):
+                    self.algo.note_residency(residency)
                 for knobs, y in tells:
                     self.algo.tell(knobs, y)
                 picks = self.algo.ask(min(want, cap)) if want > 0 else []

@@ -1,0 +1,452 @@
+"""JAX-backed incremental GP — the device fast path behind ``gp_mode="jax"``.
+
+``JaxIncrementalGP`` mirrors the numpy ``IncrementalGP`` contract
+(observe / fit_x / fit_y / predict / the ``_multi`` family) but keeps the
+kernel state on the accelerator as fixed-capacity, zero-padded device
+buffers and runs every hot step as one jitted call:
+
+* **Rank-append Cholesky on device** — ``observe`` pads the new block to a
+  power-of-two width and calls a single donated jit (``_append_jit``) that
+  writes X, extends L with ``[[L, 0], [wᵀ, chol(K₂₂ − wᵀw)]]`` and L⁻¹ with
+  the matching block inverse.  Buffers double amortizedly exactly like the
+  numpy layout, so jit retraces happen per *capacity*, not per call.  The
+  padding rows get an identity diagonal inside the jit (the Cholesky of a
+  block-diag ``[[K, 0], [0, I]]`` is ``[[L, 0], [0, I]]``) and are re-masked
+  to zero afterwards, keeping the invariant every other kernel GEMM relies
+  on: rows/cols at index ≥ n are exactly zero.
+* **Fused pool scoring** — ``predict_multi`` / ``predict_mean_multi`` /
+  ``score_ehvi`` each run kernel GEMM + solve (+ the EHVI staircase sweep)
+  over the whole candidate pool in one device call; pools are row-padded to
+  powers of two so retraces stay bounded.
+* **Inducing points (subset-of-data)** — every observation lands in a
+  host-side archive, but past ``inducing_threshold`` active points the
+  factor is periodically *thinned* back to an evenly-strided subset of the
+  archive (overflow factor 1.25 amortizes the O(m³) refactor over ~m/4
+  appends), so tell stays O(m²) and ask latency flat into the 10⁴–10⁶
+  regime.  Below the threshold the active set is the full archive and the
+  posterior matches the numpy path to float64 round-off.
+* **float64 without global flags** — every device call runs inside
+  ``jax.experimental.enable_x64()``, a thread-local scope, so GP parity
+  with the float64 numpy reference does not require flipping the process-
+  wide ``jax_enable_x64`` switch under the rest of the suite (kernel and
+  model code elsewhere still sees default float32).
+
+``jnp.linalg.cholesky`` signals a non-PD input with NaNs instead of the
+LinAlgError the numpy path catches, so the append jit also returns a
+finiteness flag for the new diagonal block; a degenerate append falls back
+to one masked full-capacity refactor (``_refactor_jit``), same as numpy.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+from jax.scipy.linalg import solve_triangular
+
+
+def jax_available() -> bool:
+    """Import gate for callers that must degrade gracefully (ci_smoke)."""
+    return True
+
+
+def _pow2(n: int) -> int:
+    p = 16
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pow2_small(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# jitted kernels — module-level so every JaxIncrementalGP instance shares the
+# trace cache (shapes, not instances, key the cache)
+# ---------------------------------------------------------------------------
+
+
+def _kern(a, b, ls, signal):
+    """RBF via ‖a‖² + ‖b‖² − 2a·b — the same GEMM form as the numpy path,
+    so the two modes agree to float64 round-off."""
+    d2 = (jnp.sum(a * a, axis=1)[:, None]
+          + jnp.sum(b * b, axis=1)[None, :] - 2.0 * (a @ b.T))
+    d2 = jnp.maximum(d2, 0.0)
+    return signal * jnp.exp(-0.5 * d2 / (ls * ls))
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _append_jit(xb, lb, lib, n, m, xnew, ls, noise, signal):
+    """Rank-append an m-row block (padded to xnew's static height B).
+
+    ``n``/``m`` are traced int32 scalars; indices for dynamic_update_slice
+    stay int32 throughout (x64 mode would otherwise mix int dtypes).
+    Returns the donated buffers plus a finite-diagonal flag — NaN means the
+    block was not PD (numpy raises LinAlgError here) and the caller must
+    refactor.
+    """
+    cap = xb.shape[0]
+    B = xnew.shape[0]
+    zero = jnp.int32(0)
+    n2 = n + m
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    mask_old = (rows < n).astype(xb.dtype)             # pre-append valid rows
+    mask_new = (rows < n2).astype(xb.dtype)
+    bvalid = (jnp.arange(B, dtype=jnp.int32) < m).astype(xb.dtype)
+
+    xb = jax.lax.dynamic_update_slice(xb, xnew * bvalid[:, None], (n, zero))
+    # kernel strips against the *valid* rows only (zero-padding ⇒ mask once)
+    k12 = _kern(xb, xnew, ls, signal) * mask_old[:, None] * bvalid[None, :]
+    k22 = (_kern(xnew, xnew, ls, signal) + noise * jnp.eye(B, dtype=xb.dtype))
+    # padding rows of the block get an identity diagonal so chol is exact
+    k22 = (k22 * bvalid[:, None] * bvalid[None, :]
+           + jnp.diag(1.0 - bvalid))
+    w = lib @ k12                                      # (cap, B); L⁻¹K₁₂
+    l22 = jnp.linalg.cholesky(k22 - w.T @ w)
+    ok = jnp.all(jnp.isfinite(jnp.diagonal(l22) * bvalid + (1.0 - bvalid)))
+    li22 = solve_triangular(l22, jnp.eye(B, dtype=xb.dtype), lower=True)
+    lb = jax.lax.dynamic_update_slice(lb, w.T, (n, zero))
+    lb = jax.lax.dynamic_update_slice(
+        lb, l22, (n, n))
+    lib = jax.lax.dynamic_update_slice(lib, -li22 @ (w.T @ lib), (n, zero))
+    lib = jax.lax.dynamic_update_slice(lib, li22, (n, n))
+    # restore the zero invariant outside the new valid n2×n2 block (the
+    # identity rows of padded appends must not leak into later GEMMs)
+    lb = lb * mask_new[:, None] * mask_new[None, :]
+    lib = lib * mask_new[:, None] * mask_new[None, :]
+    return xb, lb, lib, ok
+
+
+@jax.jit
+def _refactor_jit(xb, n, ls, noise, signal):
+    """Masked full-capacity refactor: chol of [[K, 0], [0, I]] then re-zero.
+
+    O(cap³) but called only on degenerate appends, thinning, and
+    lengthscale refreshes — all amortized."""
+    cap = xb.shape[0]
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    mask = (rows < n).astype(xb.dtype)
+    k = _kern(xb, xb, ls, signal) * mask[:, None] * mask[None, :]
+    k = k + noise * jnp.eye(cap, dtype=xb.dtype) * mask \
+        + jnp.diag(1.0 - mask)
+    lb = jnp.linalg.cholesky(k)
+    lib = solve_triangular(lb, jnp.eye(cap, dtype=xb.dtype), lower=True)
+    lb = lb * mask[:, None] * mask[None, :]
+    lib = lib * mask[:, None] * mask[None, :]
+    return lb, lib
+
+
+@jax.jit
+def _fit_y_jit(lib, yn):
+    """alpha = L⁻ᵀ L⁻¹ y over the full (zero-padded) capacity."""
+    return lib.T @ (lib @ yn)
+
+
+@jax.jit
+def _predict_jit(xb, lib, alpha, n, xq, ls, signal):
+    cap = xb.shape[0]
+    mask = (jnp.arange(cap, dtype=jnp.int32) < n).astype(xb.dtype)
+    ks = _kern(xq, xb, ls, signal) * mask[None, :]      # (P, cap)
+    mu = ks @ alpha                                     # (P, J) normalized
+    v = lib @ ks.T
+    var = jnp.clip(signal - jnp.sum(v * v, axis=0), 1e-9, None)
+    return mu, var
+
+
+@jax.jit
+def _predict_mean_jit(xb, alpha, n, xq, ls, signal):
+    cap = xb.shape[0]
+    mask = (jnp.arange(cap, dtype=jnp.int32) < n).astype(xb.dtype)
+    return (_kern(xq, xb, ls, signal) * mask[None, :]) @ alpha
+
+
+@jax.jit
+def _ehvi_jit(xb, alpha, n, xq, front, ref, ym, ysd, ls, signal):
+    """Fused: pool kernel GEMM → posterior means → denormalize → staircase
+    EHVI sweep, one device call for the whole candidate pool.
+
+    ``front`` is the sorted valid front padded with ``(ref[0], y_last)``
+    sentinel rows — each contributes a zero-width segment, so the sum
+    matches the unpadded numpy staircase exactly."""
+    cap = xb.shape[0]
+    mask = (jnp.arange(cap, dtype=jnp.int32) < n).astype(xb.dtype)
+    ks = _kern(xq, xb, ls, signal) * mask[None, :]
+    mu = ks @ alpha * ysd + ym                          # (P, 2) denormalized
+    x, y = front[:, 0], front[:, 1]
+    neg_inf = jnp.full((1,), -jnp.inf, dtype=xb.dtype)
+    lows = jnp.concatenate([neg_inf, x])
+    ups = jnp.concatenate([x, ref[0:1]])
+    levels = jnp.concatenate([ref[1:2], y])
+    width = jnp.clip(ups[None, :] - jnp.maximum(lows[None, :], mu[:, 0:1]),
+                     0.0, None)
+    height = jnp.clip(levels[None, :] - mu[:, 1:2], 0.0, None)
+    return jnp.sum(width * height, axis=1)
+
+
+class JaxIncrementalGP:
+    """Drop-in for ``IncrementalGP`` with device buffers + inducing points.
+
+    ``inducing_threshold=None`` (or a huge value) keeps every observation
+    active — exact numpy parity; with a threshold, ``len(gp)`` is the
+    active-set size and ``gp.n_total`` the archive size.
+    """
+
+    def __init__(self, lengthscale: float = 0.3, noise: float = 1e-3,
+                 signal: float = 1.0,
+                 inducing_threshold: Optional[int] = None,
+                 inducing_overflow: float = 1.25):
+        self.ls = float(lengthscale)
+        self.noise = float(noise)
+        self.signal = float(signal)
+        self.inducing_threshold = inducing_threshold
+        self.inducing_overflow = float(inducing_overflow)
+        self._n = 0                       # active rows on device
+        self._cap = 0
+        self._dim = 0
+        self._xb = self._lb = self._lib = None
+        # full observation archive (host): the thinning source
+        self._ax: Optional[np.ndarray] = None
+        self._n_all = 0
+        self._active_idx = np.zeros(0, np.int64)   # archive row per active row
+        self.n_appends = 0
+        self.n_refactors = 0
+        self.n_thins = 0
+        # fit state (single- and multi-target kept separate, like numpy)
+        self._alpha1 = self._ym = self._ys = None
+        self._alpha_m = self._ym_m = self._ys_m = None
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def n_total(self) -> int:
+        return self._n_all
+
+    # -- buffers --------------------------------------------------------------
+    def _ensure_cap(self, need: int, dim: int) -> None:
+        if self._cap >= need and self._dim == dim:
+            return
+        cap = _pow2(need)
+        with enable_x64():
+            xb = jnp.zeros((cap, dim), jnp.float64)
+            lb = jnp.zeros((cap, cap), jnp.float64)
+            lib = jnp.zeros((cap, cap), jnp.float64)
+            n = self._n
+            if n:
+                xb = xb.at[:n, :].set(self._xb[:n, :])
+                lb = lb.at[:n, :n].set(self._lb[:n, :n])
+                lib = lib.at[:n, :n].set(self._lib[:n, :n])
+        self._xb, self._lb, self._lib = xb, lb, lib
+        self._cap, self._dim = cap, dim
+        act = np.zeros(cap, np.int64)
+        act[:self._n] = self._active_idx[:self._n]
+        self._active_idx = act
+
+    def _archive(self, x_new: np.ndarray) -> np.ndarray:
+        m = len(x_new)
+        need = self._n_all + m
+        if self._ax is None or len(self._ax) < need:
+            cap = _pow2(need)
+            ax = np.zeros((cap, x_new.shape[1]))
+            if self._n_all:
+                ax[:self._n_all] = self._ax[:self._n_all]
+            self._ax = ax
+        self._ax[self._n_all:need] = x_new
+        idx = np.arange(self._n_all, need, dtype=np.int64)
+        self._n_all = need
+        return idx
+
+    # -- incremental growth ---------------------------------------------------
+    def observe(self, x_new: np.ndarray) -> "JaxIncrementalGP":
+        x_new = np.atleast_2d(np.asarray(x_new, float))
+        m = len(x_new)
+        if m == 0:
+            return self
+        idx = self._archive(x_new)
+        self._append_active(x_new, idx)
+        thr = self.inducing_threshold
+        if thr is not None and self._n > int(thr * self.inducing_overflow):
+            self._thin()
+        return self
+
+    def _append_active(self, xa: np.ndarray, idx: np.ndarray) -> None:
+        m, d = xa.shape
+        B = _pow2_small(m)
+        # capacity must cover the *padded* block: dynamic_update_slice
+        # clamps out-of-bounds starts, which would silently corrupt rows
+        self._ensure_cap(self._n + B, d)
+        xpad = np.zeros((B, d))
+        xpad[:m] = xa
+        with enable_x64():
+            self._xb, self._lb, self._lib, ok = _append_jit(
+                self._xb, self._lb, self._lib,
+                np.int32(self._n), np.int32(m), jnp.asarray(xpad),
+                self.ls, self.noise, self.signal)
+        self._active_idx[self._n:self._n + m] = idx
+        self._n += m
+        self.n_appends += 1
+        if not bool(ok):
+            # degenerate block (duplicated rows beyond the noise jitter):
+            # same fallback as the numpy LinAlgError path
+            self._refactor()
+
+    def _refactor(self) -> None:
+        with enable_x64():
+            self._lb, self._lib = _refactor_jit(
+                self._xb, np.int32(self._n), self.ls, self.noise, self.signal)
+        self.n_refactors += 1
+
+    def _thin(self) -> None:
+        """Shrink the active set to an evenly-strided archive subset."""
+        thr = int(self.inducing_threshold)
+        sel = np.unique(np.linspace(0, self._n_all - 1, thr).round()
+                        .astype(np.int64))
+        xa = self._ax[sel]
+        m, d = xa.shape
+        self._n = 0
+        self._ensure_cap(m, d)
+        with enable_x64():
+            self._xb = (jnp.zeros((self._cap, d), jnp.float64)
+                        .at[:m, :].set(jnp.asarray(xa)))
+        self._n = m
+        self._active_idx[:m] = sel
+        self._refactor()
+        self.n_thins += 1
+
+    def set_lengthscale(self, ls: float) -> "JaxIncrementalGP":
+        """Hyperparameter refresh: new lengthscale, one masked refactor
+        riding the existing device buffers."""
+        ls = float(ls)
+        if ls == self.ls:
+            return self
+        self.ls = ls
+        if self._n:
+            self._refactor()
+        return self
+
+    def fit_x(self, x: np.ndarray) -> "JaxIncrementalGP":
+        """Reset and bulk-load (equivalence/refit entry point)."""
+        self._n = 0
+        self._n_all = 0
+        return self.observe(x)
+
+    # -- fits -----------------------------------------------------------------
+    def _active_targets(self, Y: np.ndarray) -> np.ndarray:
+        """Archive-aligned targets → active subset (SoD selection)."""
+        Y = np.asarray(Y, float)
+        if len(Y) == self._n:
+            return Y
+        assert len(Y) == self._n_all, (
+            f"targets must align with the archive ({self._n_all}) or the "
+            f"active set ({self._n}), got {len(Y)}")
+        return Y[self._active_idx[:self._n]]
+
+    def _padded(self, ya: np.ndarray) -> jnp.ndarray:
+        out = np.zeros((self._cap,) + ya.shape[1:])
+        out[:self._n] = ya
+        return jnp.asarray(out)
+
+    def fit_y(self, y: np.ndarray) -> "JaxIncrementalGP":
+        assert self._n > 0, "observe first"
+        ya = self._active_targets(np.asarray(y, float))
+        self._ym = float(np.mean(ya))
+        self._ys = float(np.std(ya)) or 1.0
+        with enable_x64():
+            self._alpha1 = _fit_y_jit(
+                self._lib, self._padded((ya - self._ym) / self._ys)[:, None])
+        return self
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "JaxIncrementalGP":
+        return self.fit_x(x).fit_y(y)
+
+    def fit_y_multi(self, Y: np.ndarray) -> "JaxIncrementalGP":
+        assert self._n > 0, "observe first"
+        ya = self._active_targets(Y)
+        self._ym_m = ya.mean(axis=0)
+        std = ya.std(axis=0)
+        self._ys_m = np.where(std > 0, std, 1.0)
+        with enable_x64():
+            self._alpha_m = _fit_y_jit(
+                self._lib, self._padded((ya - self._ym_m) / self._ys_m))
+        return self
+
+    # -- predicts -------------------------------------------------------------
+    def _pad_pool(self, xs: np.ndarray):
+        xs = np.atleast_2d(np.asarray(xs, float))
+        P = _pow2_small(max(len(xs), 1))
+        xq = np.zeros((P, xs.shape[1]))
+        xq[:len(xs)] = xs
+        # the device transfer must happen inside the x64 scope: outside it,
+        # jnp.asarray silently truncates the queries to float32 and every
+        # downstream GEMM runs on f32-rounded inputs (≈1e-7 posterior error
+        # — the exact silent-precision bug this module exists to avoid)
+        with enable_x64():
+            xq = jnp.asarray(xq)
+        return xq, len(xs)
+
+    def predict(self, xs: np.ndarray):
+        xq, M = self._pad_pool(xs)
+        with enable_x64():
+            mu, var = _predict_jit(self._xb, self._lib, self._alpha1,
+                                   np.int32(self._n), xq, self.ls, self.signal)
+        mu = np.asarray(mu)[:M, 0]
+        sig = np.sqrt(np.asarray(var)[:M])
+        return mu * self._ys + self._ym, sig * self._ys
+
+    def predict_multi(self, xs: np.ndarray):
+        xq, M = self._pad_pool(xs)
+        with enable_x64():
+            mu, var = _predict_jit(self._xb, self._lib, self._alpha_m,
+                                   np.int32(self._n), xq, self.ls, self.signal)
+        mu = np.asarray(mu)[:M] * self._ys_m + self._ym_m
+        sig = np.sqrt(np.asarray(var)[:M])[:, None] * self._ys_m
+        return mu, sig
+
+    def predict_mean_multi(self, xs: np.ndarray) -> np.ndarray:
+        xq, M = self._pad_pool(xs)
+        with enable_x64():
+            mu = _predict_mean_jit(self._xb, self._alpha_m, np.int32(self._n),
+                                   xq, self.ls, self.signal)
+        return np.asarray(mu)[:M] * self._ys_m + self._ym_m
+
+    def score_ehvi(self, xs: np.ndarray, front_y: np.ndarray,
+                   ref: np.ndarray) -> np.ndarray:
+        """Fused EHVI over the pool: posterior means + staircase sweep in
+        one device call (means are *not* round-tripped to the host)."""
+        xs = np.atleast_2d(np.asarray(xs, float))
+        if len(xs) == 0:
+            return np.zeros(0)
+        ref = np.asarray(ref, float)
+        front = np.asarray(front_y, float)
+        front = front[np.all(front < ref, axis=1)]
+        if len(front) == 0:
+            mu = self.predict_mean_multi(xs)
+            return (np.clip(ref[0] - mu[:, 0], 0.0, None)
+                    * np.clip(ref[1] - mu[:, 1], 0.0, None))
+        from repro.core.results import nondominated_mask
+
+        front = front[nondominated_mask(front)]
+        front = front[np.argsort(front[:, 0])]
+        F = _pow2_small(len(front))
+        pad = np.repeat([[ref[0], front[-1, 1]]], F - len(front), axis=0)
+        fpad = np.vstack([front, pad])
+        xq, M = self._pad_pool(xs)
+        with enable_x64():
+            s = _ehvi_jit(self._xb, self._alpha_m, np.int32(self._n), xq,
+                          jnp.asarray(fpad), jnp.asarray(ref),
+                          jnp.asarray(self._ym_m), jnp.asarray(self._ys_m),
+                          self.ls, self.signal)
+        return np.asarray(s)[:M]
+
+    def stats(self) -> dict:
+        return {"n_active": self._n, "n_total": self._n_all,
+                "capacity": self._cap, "appends": self.n_appends,
+                "refactors": self.n_refactors, "thins": self.n_thins}

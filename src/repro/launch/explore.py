@@ -18,6 +18,30 @@ redeploying the network; sw knobs recompile (JClient caches by fingerprint).
 
 ``--shape train_4k`` etc. switch the workload to a training/prefill/decode
 step of the assigned architectures on a dp×tp slice of the same 8 devices.
+
+GP surrogate modes and flags (bayesopt/pal only)
+------------------------------------------------
+``--gp incremental``  rank-append Cholesky per tell on the host CPU — O(n²)
+  per update, cached across asks (the default, and the numerical reference).
+``--gp refit``        full O(n³) refactor per ask (pre-incremental path,
+  kept for benchmarking and equivalence tests).
+``--gp jax``          device-resident fast path: the same incremental
+  buffer layout lives on the accelerator as jitted, donated rank-appends;
+  pool scoring (posterior means + EHVI staircase) is fused into one device
+  call; past ``--gp-inducing`` observations a subset-of-data inducing-point
+  approximation keeps the active set — and ask latency — flat into the
+  10⁴+ regime.  Matches the numpy reference to float64 round-off while the
+  active set is exact.
+``--gp-inducing N``   inducing-point threshold for ``--gp jax``
+  (default 5000; the active set is thinned to a stride of the archive once
+  observations exceed ~1.25×N).
+``--gp-refresh K``    hyperparameter refresh schedule, any mode: every K
+  tells the RBF lengthscale is re-tuned (median-distance candidates scored
+  by log marginal likelihood on a strided subsample) and the live factor is
+  rebuilt in place.
+``--speculate-slow-mult M``  queued-chunk speculation: chunks not yet
+  started on a client whose per-config EWMA exceeds M× the median of the
+  other healthy clients are mirrored elsewhere (first answer wins).
 """
 import argparse
 import threading
@@ -69,6 +93,12 @@ def parse_args():
                    help="speculative re-dispatch: mirror a running chunk to "
                         "a second client once it has burned this fraction "
                         "of its deadline budget (first answer wins)")
+    p.add_argument("--speculate-slow-mult", type=float, default=None,
+                   metavar="MULT",
+                   help="queued-chunk speculation: mirror chunks not yet "
+                        "started on a client whose per-config EWMA exceeds "
+                        "this multiple of the median of the other healthy "
+                        "clients' EWMAs (first answer wins)")
     p.add_argument("--cache-dir", default=None,
                    help="persistent artifact cache root: compiled artifacts "
                         "are pickled content-addressed under "
@@ -85,11 +115,21 @@ def parse_args():
                         "model-based search math overlaps with client "
                         "evaluation instead of stalling the fleet")
     p.add_argument("--gp", default="incremental",
-                   choices=["incremental", "refit"],
+                   choices=["incremental", "refit", "jax"],
                    help="bayesopt/pal surrogate update: incremental = "
                         "rank-append Cholesky per tell (O(n^2), cached "
                         "across asks); refit = full O(n^3) refactor per "
-                        "ask (pre-PR behaviour, for benchmarking)")
+                        "ask (pre-PR behaviour, for benchmarking); jax = "
+                        "device-resident jitted fast path with fused pool "
+                        "scoring and inducing points (see module docstring)")
+    p.add_argument("--gp-inducing", type=int, default=5000,
+                   help="--gp jax: inducing-point threshold — past this "
+                        "many observations the active set is thinned to a "
+                        "strided subset so ask latency stays flat")
+    p.add_argument("--gp-refresh", type=int, default=None, metavar="K",
+                   help="hyperparameter refresh: re-tune the GP lengthscale "
+                        "every K tells, rebuilding the live factor in place "
+                        "(any --gp mode; default: never)")
     return p.parse_args()
 
 
@@ -193,7 +233,9 @@ def main():
                         knob_names=[k.name for k in space],
                         metric_names=("time_s", "power_w"))
     host = JHost(pair.host(), store, timeout_s=args.timeout, poll_s=0.05)
-    algo_kw = ({"gp_mode": args.gp}
+    algo_kw = ({"gp_mode": args.gp,
+                "hyper_refresh_every": args.gp_refresh,
+                "inducing_threshold": args.gp_inducing}
                if args.algorithm in ("bayesopt", "pal") else {})
     algo = ALGORITHMS[args.algorithm](space, seed=args.seed, **algo_kw)
     search = algo
@@ -211,8 +253,10 @@ def main():
                      affinity=args.affinity,
                      fingerprint_fn=(jc.cache_key if args.affinity != "off"
                                      or args.speculate_at is not None
+                                     or args.speculate_slow_mult is not None
                                      else None),
                      speculate_frac=args.speculate_at,
+                     speculate_slow_mult=args.speculate_slow_mult,
                      pipeline_depth=args.pipeline_depth)
     finally:
         if search is not algo:

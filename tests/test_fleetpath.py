@@ -675,3 +675,121 @@ def test_pal_mean_only_off_matches_shape():
     _drive_pal(pal, 12)
     assert pal.n_mean_only == 0 and not pal._ruled_out
     assert len(pal.history_x) == 12
+
+
+# ---------------------------------------------------------------------------
+# queued-chunk speculation (speculate_slow_mult)
+# ---------------------------------------------------------------------------
+
+
+def queued_sched(clk, **kw):
+    kw.setdefault("policy", "pipelined")
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("timeout_s", 10.0)
+    kw.setdefault("speculate_slow_mult", 3.0)
+    return DispatchScheduler([0, 1], fingerprint_fn=fp_of, clock=clk, **kw)
+
+
+def _establish_ewmas(s, clk, slow_per_cfg=3.0, fast_per_cfg=0.1):
+    """One chunk per client, answered at different speeds: client 0's EWMA
+    lands at ``slow_per_cfg`` s/config, client 1's at ``fast_per_cfg``."""
+    for i in range(4):
+        s.submit(ftc(i, "A"))
+    d = dict(s.next_dispatches())
+    clk.advance(2 * fast_per_cfg)
+    answer(s, 1, d[1])
+    clk.advance(2 * slow_per_cfg - 2 * fast_per_cfg)
+    answer(s, 0, d[0])
+    assert s.slots[0].ewma_per_cfg_s == pytest.approx(slow_per_cfg)
+    assert s.slots[1].ewma_per_cfg_s == pytest.approx(fast_per_cfg)
+
+
+def _queue_on_slow(s):
+    """Refill: client 0 (slow) gets a head chunk + a queued chunk [8, 9];
+    client 1 gets a head chunk only, leaving it spare depth for a mirror."""
+    for i in range(4, 10):
+        s.submit(ftc(i, "A"))
+    s.next_dispatches()
+    queued = s.chunks[s.slots[0].chunks[1]]
+    assert queued.started_at is None
+    assert sorted(queued.awaiting) == [8, 9]
+    return queued
+
+
+def test_queued_chunk_mirrored_off_slow_client():
+    clk = FakeClock()
+    s = queued_sched(clk)
+    _establish_ewmas(s, clk)
+    _queue_on_slow(s)
+    d = s.next_dispatches()                   # speculation pass
+    assert len(d) == 1 and d[0][0] == 1       # mirrored to the fast client
+    assert [t.config_id for t in d[0][1]] == [8, 9]
+    assert s.n_spec_queued == 1 and s.n_speculated == 1
+    assert s.next_dispatches() == []          # never mirrored twice
+    st = s.stats()
+    assert st["spec_queued"] == 1
+
+
+def test_queued_mirror_win_counters_and_duplicates():
+    clk = FakeClock()
+    s = queued_sched(clk)
+    _establish_ewmas(s, clk)
+    _queue_on_slow(s)
+    (c1, tcs), = s.next_dispatches()
+    # fast client answers the mirror first (its own head, then the mirror)
+    answer(s, 1, [ftc(6, "A"), ftc(7, "A")])
+    answer(s, 1, tcs)
+    assert s.n_spec_queued_wins_mirror == 1
+    assert s.n_spec_cancelled == 1
+    assert s.n_spec_wins_mirror == 0          # deadline-kind counter untouched
+    # the cancelled primary left client 0's queue; its head is unaffected
+    assert len(s.slots[0].chunks) == 1
+    # the slow client's late answers are plain duplicates
+    assert s.on_result(ok(8, 0)) is None
+    assert s.on_result(ok(9, 0)) is None
+
+
+def test_queued_primary_win_cancels_mirror():
+    clk = FakeClock()
+    s = queued_sched(clk)
+    _establish_ewmas(s, clk)
+    _queue_on_slow(s)
+    s.next_dispatches()
+    # the slow client powers through after all: head, then the queued chunk
+    answer(s, 0, [ftc(4, "A"), ftc(5, "A")])
+    answer(s, 0, [ftc(8, "A"), ftc(9, "A")])
+    assert s.n_spec_queued_wins_primary == 1
+    assert s.n_spec_cancelled == 1
+    assert not s.slots[1].chunks or all(
+        s.chunks[c].mirror_of is None for c in s.slots[1].chunks)
+
+
+def test_no_queued_mirror_when_client_not_slow_enough():
+    clk = FakeClock()
+    s = queued_sched(clk)
+    _establish_ewmas(s, clk, slow_per_cfg=0.25, fast_per_cfg=0.1)
+    _queue_on_slow(s)
+    assert s.next_dispatches() == []          # 0.25 < 3.0 * 0.1
+    assert s.n_spec_queued == 0
+
+
+def test_speculate_slow_mult_validation():
+    with pytest.raises(ValueError):
+        DispatchScheduler([0, 1], speculate_slow_mult=1.0)
+    with pytest.raises(ValueError):
+        DispatchScheduler([0, 1], speculate_slow_mult=0.5)
+
+
+def test_resident_fingerprints_union_of_healthy_shadows():
+    clk = FakeClock()
+    s = affinity_sched(clk=clk)
+    s.submit(ftc(0, "A"))
+    s.submit(ftc(1, "B"))
+    d = s.next_dispatches()
+    for client, tcs in d:
+        answer(s, client, tcs)
+    assert s.resident_fingerprints() == {"A", "B"}
+    owner_of_a = next(client for client, tcs in d
+                      if any(t.knobs["sw"] == "A" for t in tcs))
+    s.slots[owner_of_a].quarantined = True
+    assert "A" not in s.resident_fingerprints()

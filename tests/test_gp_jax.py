@@ -1,0 +1,206 @@
+"""JAX GP fast path (gp_mode="jax"): numerical equivalence to the numpy
+reference across doubling boundaries, float64 regression (no silent float32
+and no global x64 leak), the fused EHVI device sweep, subset-of-data
+inducing points (engagement + error bound), degenerate-append fallback,
+pick-sequence equality through BayesOpt/PAL, and the hyperparameter refresh
+schedule riding the device buffers."""
+import numpy as np
+import pytest
+
+gp_jax = pytest.importorskip("repro.core.search.gp_jax")
+
+from repro.core.search.bayesopt import (BayesOpt, GP, IncrementalGP, PAL,
+                                        ehvi_improvements)
+from repro.core.search.gp_jax import JaxIncrementalGP
+from repro.core.space import tpu_pod_space
+
+
+def _toy_objectives(space, knobs):
+    x = space.encode(knobs)
+    time = 2.0 - 1.2 * x[0] + 0.4 * x[1] + 0.1 * np.sin(7 * x.sum())
+    power = 0.5 + 1.5 * x[0] ** 2 + 0.2 * x[2]
+    return np.array([time, power])
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence to the numpy IncrementalGP
+# ---------------------------------------------------------------------------
+
+
+def test_jax_matches_numpy_across_doubling_boundaries():
+    """Mixed append block sizes crossing the capacity doublings (16, 32)
+    must produce posteriors equal to the numpy rank-append path at float64
+    round-off — single-target and multi-target."""
+    rng = np.random.default_rng(0)
+    ref = IncrementalGP()
+    jgp = JaxIncrementalGP()
+    xs = np.zeros((0, 5))
+    for step in (1, 1, 3, 1, 10, 1, 2, 17):
+        xn = rng.random((step, 5))
+        xs = np.vstack([xs, xn])
+        ref.observe(xn)
+        jgp.observe(xn)
+        assert len(jgp) == len(xs)
+    y = rng.random(len(xs))
+    Y = rng.random((len(xs), 2))
+    q = rng.random((9, 5))
+    mu_r, sig_r = ref.fit_y(y).predict(q)
+    mu_j, sig_j = jgp.fit_y(y).predict(q)
+    np.testing.assert_allclose(mu_j, mu_r, atol=1e-10)
+    np.testing.assert_allclose(sig_j, sig_r, atol=1e-10)
+    mu_r, sig_r = ref.fit_y_multi(Y).predict_multi(q)
+    mu_j, sig_j = jgp.fit_y_multi(Y).predict_multi(q)
+    np.testing.assert_allclose(mu_j, mu_r, atol=1e-10)
+    np.testing.assert_allclose(sig_j, sig_r, atol=1e-10)
+    np.testing.assert_allclose(jgp.predict_mean_multi(q),
+                               ref.predict_mean_multi(q), atol=1e-10)
+
+
+def test_float64_end_to_end_no_global_leak():
+    """The device path must run in true float64 — a silently-float32 path
+    cannot hit 1e-12 against the numpy reference — while jax's global
+    default dtype stays float32 outside the scoped enable_x64 blocks."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    xs = rng.random((40, 4))
+    y = rng.random(40)
+    q = rng.random((8, 4))
+    jgp = JaxIncrementalGP().fit_x(xs).fit_y(y)
+    assert jgp._xb.dtype == jnp.float64
+    assert jgp._lb.dtype == jnp.float64
+    mu_r, sig_r = IncrementalGP().fit_x(xs).fit_y(y).predict(q)
+    mu_j, sig_j = jgp.predict(q)
+    np.testing.assert_allclose(mu_j, mu_r, atol=1e-12)
+    np.testing.assert_allclose(sig_j, sig_r, atol=1e-12)
+    assert mu_j.dtype == np.float64
+    # scoping regression: enable_x64 must not leak into the process default
+    assert jnp.zeros(1).dtype == jnp.float32
+
+
+def test_fused_ehvi_matches_numpy_staircase():
+    rng = np.random.default_rng(2)
+    xs = rng.random((30, 4))
+    Y = rng.random((30, 2))
+    pool = rng.random((25, 4))
+    ref_pt = Y.max(0) * 1.1 + 1e-9
+    ref = IncrementalGP().fit_x(xs).fit_y_multi(Y)
+    mus = ref.predict_mean_multi(pool)
+    want = ehvi_improvements(Y, ref_pt, mus)
+    jgp = JaxIncrementalGP().fit_x(xs)
+    jgp.fit_y_multi(Y)
+    got = jgp.score_ehvi(pool, Y, ref_pt)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_degenerate_append_triggers_nan_flag_fallback():
+    """With zero noise an exact duplicate makes the append's Schur
+    complement numerically non-PD.  ``jnp.linalg.cholesky`` returns NaN
+    instead of raising (unlike numpy's LinAlgError), so the append jit
+    reports a finiteness flag and the masked full refactor engages."""
+    rng = np.random.default_rng(3)
+    xs = rng.random((12, 3))
+    jgp = JaxIncrementalGP(noise=0.0).fit_x(xs)
+    before = jgp.n_refactors
+    jgp.observe(np.vstack([xs[3][None], xs[3][None]]))
+    assert jgp.n_refactors == before + 1
+    assert len(jgp) == 14                     # the data still landed
+
+
+def test_masked_refactor_matches_numpy_factorisation():
+    """The fallback payload: a full masked refactor over the zero-padded
+    device buffers must reproduce the numpy factorisation exactly."""
+    rng = np.random.default_rng(6)
+    xs = rng.random((20, 3))
+    jgp = JaxIncrementalGP().fit_x(xs)
+    jgp._refactor()                           # force the fallback path
+    y = rng.random(20)
+    q = rng.random((6, 3))
+    mu_j, sig_j = jgp.fit_y(y).predict(q)
+    mu_r, sig_r = IncrementalGP().fit_x(xs).fit_y(y).predict(q)
+    np.testing.assert_allclose(mu_j, mu_r, atol=1e-10)
+    np.testing.assert_allclose(sig_j, sig_r, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# inducing points (subset-of-data)
+# ---------------------------------------------------------------------------
+
+
+def test_inducing_points_engage_and_stay_bounded():
+    rng = np.random.default_rng(4)
+    jgp = JaxIncrementalGP(inducing_threshold=64)
+    xs = rng.random((300, 3))
+    for i in range(0, 300, 25):
+        jgp.observe(xs[i:i + 25])
+    assert jgp.n_total == 300
+    # active set stays within the thinning band around the threshold
+    assert len(jgp) <= int(64 * jgp.inducing_overflow)
+    assert jgp.n_thins > 0
+    s = jgp.stats()
+    assert s["n_active"] == len(jgp) and s["n_total"] == 300
+
+
+def test_inducing_error_bounded_on_smooth_function():
+    """SoD on a smooth target: the thinned posterior tracks the function to
+    a loose tolerance (far tighter than the function's range)."""
+    rng = np.random.default_rng(5)
+    xs = rng.random((300, 2))
+
+    def f(x):
+        return np.sin(3 * x[:, 0]) + 0.5 * np.cos(2 * x[:, 1])
+
+    jgp = JaxIncrementalGP(inducing_threshold=64).fit_x(xs).fit_y(f(xs))
+    q = rng.random((50, 2))
+    mu, _ = jgp.predict(q)
+    rmse = float(np.sqrt(np.mean((mu - f(q)) ** 2)))
+    assert rmse < 0.15                     # function range is ~3.0
+
+
+# ---------------------------------------------------------------------------
+# pick-sequence equality through the searchers
+# ---------------------------------------------------------------------------
+
+
+def test_bayesopt_jax_picks_match_incremental():
+    space = tpu_pod_space(n_chips=256)
+    seqs = {}
+    for mode in ("incremental", "jax"):
+        algo = BayesOpt(space, seed=3, n_init=6, pool_size=64,
+                        strategy="ehvi", gp_mode=mode)
+        seq = []
+        for _ in range(30):
+            c = algo.ask(1)[0]
+            algo.tell(c, _toy_objectives(space, c))
+            seq.append(c)
+        seqs[mode] = seq
+    assert seqs["jax"] == seqs["incremental"]
+
+
+def test_pal_jax_picks_match_incremental():
+    space = tpu_pod_space(n_chips=256)
+    seqs = {}
+    for mode in ("incremental", "jax"):
+        algo = PAL(space, seed=3, n_init=6, pool_size=64, gp_mode=mode)
+        seq = []
+        for _ in range(20):
+            c = algo.ask(1)[0]
+            algo.tell(c, _toy_objectives(space, c))
+            seq.append(c)
+        seqs[mode] = seq
+    assert seqs["jax"] == seqs["incremental"]
+
+
+def test_jax_hyper_refresh_retunes_lengthscale():
+    """On a purely linear target the log-ML prefers a larger lengthscale
+    than the 0.3 default — the schedule must both fire and actually move
+    the hyperparameter on the device buffers."""
+    space = tpu_pod_space(n_chips=256)
+    algo = BayesOpt(space, seed=3, n_init=6, pool_size=64,
+                    strategy="ehvi", gp_mode="jax", hyper_refresh_every=10)
+    for _ in range(30):
+        c = algo.ask(1)[0]
+        x = space.encode(c)
+        algo.tell(c, np.array([x[0] + 0.5 * x[1], 1.0 - x[0] + 0.3 * x[2]]))
+    assert algo.n_hyper_refreshes >= 2
+    assert algo._gp.ls > 0.3
