@@ -40,7 +40,16 @@ the median per-pair rr/affinity wall ratio vs
 benchmarks.run fleetpath``).  No persistent cache is involved, so every
 rep pays identical cold compiles and the ratio isolates placement.
 
-A fourth row gates the **big-n jax search path** (PR 6's tentpole): the
+A fourth row gates the **fleet store** (PR 7's tentpole): the same
+fleetpath smoke scenario run cold (fresh clients populate a serve-mode
+``FleetArtifactStore``) then warm-peer (brand-new clients, same store —
+every artifact arrives over the wire, zero compiles), gated on the
+median per-pair cold/warm-peer wall ratio vs
+``fleet_store_cold_vs_warmpeer_ratio`` (recorded by ``SMOKE_RECORD=1
+benchmarks.run fleetpath``).  A warm-peer run that compiles at all is a
+hard fail regardless of baseline.
+
+A fifth row gates the **big-n jax search path** (PR 6's tentpole): the
 per-cycle (tell+ask) cost ratio between two observation-count checkpoints
 both past the subset-of-data inducing threshold
 (``searchpath_bign_smoke_measure``: checkpoints 300/1200, inducing 256).
@@ -58,6 +67,7 @@ import os
 import sys
 
 from benchmarks.common import (REPO, evalpath_workload,
+                               fleet_store_smoke_measure,
                                fleetpath_smoke_measure,
                                fleetpath_smoke_workload,
                                searchpath_bign_smoke_measure,
@@ -181,6 +191,39 @@ def fleetpath_gate(baseline) -> int:
     return 0 if ratio >= floor else 1
 
 
+def fleet_store_gate(baseline) -> int:
+    tcs, jc, build = fleetpath_smoke_workload()
+    wall_c, wall_w, ratio, n_cold, n_warm = fleet_store_smoke_measure(
+        tcs, jc, build)
+    n = len(tcs)
+    if n_warm != 0:
+        print(f"SMOKE FAIL (fleet_store): warm-peer run compiled "
+              f"{n_warm} times — every artifact should arrive over "
+              f"the wire from the fleet store")
+        return 1
+    eps = n / wall_w
+    print(f"smoke: {eps:.0f} warm-peer fleet-store evals/s over {n} configs "
+          f"({n / wall_c:.0f} cold fleet, {n_cold} compiles; "
+          f"cold/warm-peer ratio {ratio:.2f})")
+
+    try:
+        base_ratio = float(baseline["fleet_store_cold_vs_warmpeer_ratio"])
+        base_eps = float(baseline["fleet_store_warmpeer_smoke_evals_per_s"])
+    except (KeyError, ValueError):
+        print("smoke: no checked-in fleet_store baseline — passing "
+              "(SMOKE_RECORD=1 benchmarks.run fleetpath records one)")
+        return 0
+
+    print(f"smoke: fleet_store absolute {eps:.0f} vs {base_eps:.0f} baseline "
+          f"evals/s ({eps / base_eps:.2f}x; informational)")
+    floor = base_ratio * (1.0 - TOLERANCE)
+    verdict = "ok" if ratio >= floor else "REGRESSION"
+    print(f"smoke: fleet_store ratio gate {ratio:.2f} vs floor {floor:.2f} "
+          f"(baseline ratio {base_ratio:.2f}, tolerance {TOLERANCE:.0%}) "
+          f"-> {verdict}")
+    return 0 if ratio >= floor else 1
+
+
 def searchpath_bign_gate(baseline) -> int:
     try:
         from repro.core.search import gp_jax  # noqa: F401
@@ -220,8 +263,9 @@ def main() -> int:
     rc = evalpath_gate(space, jc, build, baseline)
     rc_search = searchpath_gate(space, jc, build, baseline)
     rc_fleet = fleetpath_gate(baseline)
+    rc_store = fleet_store_gate(baseline)
     rc_bign = searchpath_bign_gate(baseline)
-    return rc or rc_search or rc_fleet or rc_bign
+    return rc or rc_search or rc_fleet or rc_store or rc_bign
 
 
 if __name__ == "__main__":

@@ -54,6 +54,24 @@ Every bench row carries ``us_per_call`` (mean wall per evaluation) and
     arm (≥ unique_sw: every group rode the disk cache);
   - ``fleetpath_smoke_ratio``          — median per-pair rr/affinity wall
     ratio at smoke size (the CI gate statistic, see ci_smoke.py).
+* ``fleetpath`` fleet-store rows (PR 7 — host-mediated artifact sharing,
+  ``--fleet-cache serve`` analogue, same 4-client workload):
+  - ``fleetpath_fleet_wall_ms``        — cold fleet, round-robin placement,
+    fleet store on: every fingerprint compiles exactly once fleet-wide
+    and peers fetch it through the host;
+  - ``fleetpath_fleet_compiles``       — fleet-wide compiles in that arm
+    (acceptance: == unique_sw exactly, vs clients × unique_sw without
+    the store);
+  - ``fleetpath_fleet_hits`` / ``fleetpath_fleet_served_mb`` — store
+    queries served / blob MB pushed to clients in the cold arm;
+  - ``fleetpath_warmpeer_wall_ms``     — fresh clients (cold LRU, no
+    disk) against the already-populated store: every artifact arrives
+    over the wire (acceptance: 0 compiles);
+  - ``fleetpath_warmpeer_vs_warmlocal``— warm-peer wall / warm-local
+    (disk) wall (acceptance: ≤ 1.3 — a peer fetch costs about what a
+    local disk read does at bench blob sizes);
+  - ``fleet_store_smoke_ratio``        — median per-pair cold/warm-peer
+    wall ratio at smoke size (the CI gate statistic, see ci_smoke.py).
 * ``searchpath`` big-n rows (this PR — the ``gp_mode="jax"`` fast path;
   all skipped gracefully when jax is unavailable):
   - ``searchpath_n5k_ask_ms_n1000`` / ``searchpath_n5k_ask_ms_n5000`` —
@@ -272,10 +290,17 @@ def fleetpath_workload(n_fps: int = 8, compile_cost_s: float = 0.025,
 def run_fleetpath(tcs, jc, build, *, clients: int = 4,
                   affinity: str = "strict", cache_root: str = None,
                   batch_size: int = 12, reps: int = 1,
-                  speculate_frac: float = None, timeout_s: float = 120.0):
+                  speculate_frac: float = None, timeout_s: float = 120.0,
+                  fleet_cache: str = None, fleet_store=None):
     """Drive the full host loop with compile-affinity placement and an
     optional per-client persistent artifact cache
     (``cache_root/client<i>``, each board owning its own disk).
+
+    With ``fleet_cache`` (``"serve"`` | ``"relay"``) clients additionally
+    share artifacts through a host-mediated ``FleetArtifactStore``; pass
+    a ``fleet_store`` instance to retain it across runs (the warm-peer
+    arm: fresh clients, pre-populated store), otherwise one is created
+    per rep.
 
     Same fixed-search replay as ``run_hostpath`` (config_id i ↔ tcs[i]),
     plus fleet-wide compile accounting.  Returns (best_wall_s,
@@ -285,7 +310,8 @@ def run_fleetpath(tcs, jc, build, *, clients: int = 4,
     import threading
     import time as _time
 
-    from repro.core import JClient, JHost, ResultStore, transport
+    from repro.core import (FleetArtifactStore, JClient, JHost, ResultStore,
+                            transport)
 
     best = None
     for _ in range(reps):
@@ -295,20 +321,27 @@ def run_fleetpath(tcs, jc, build, *, clients: int = 4,
             cdir = (None if cache_root is None
                     else os.path.join(cache_root, f"client{i}"))
             cl = JClient(jc, build, transport=pair.client(i), client_id=i,
-                         cache_size=256, cache_dir=cdir)
+                         cache_size=256, cache_dir=cdir,
+                         fleet_mode=fleet_cache)
             cls.append(cl)
             threading.Thread(target=cl.serve, kwargs=dict(poll_s=0.005),
                              daemon=True).start()
         host = JHost(pair.host(), ResultStore(), timeout_s=timeout_s,
                      poll_s=0.002)
         search = _FixedSearch([tc.knobs for tc in tcs])
+        fstore = None
+        if fleet_cache is not None:
+            fstore = (fleet_store if fleet_store is not None
+                      else FleetArtifactStore(mode=fleet_cache))
         fp_fn = (jc.cache_key if affinity != "off"
-                 or speculate_frac is not None else None)
+                 or speculate_frac is not None
+                 or fleet_cache is not None else None)
         t0 = _time.perf_counter()
         store = host.explore(search, tcs[0].arch, tcs[0].shape, len(tcs),
                              batch_size=batch_size, dispatch="pipelined",
                              affinity=affinity, fingerprint_fn=fp_fn,
-                             speculate_frac=speculate_frac)
+                             speculate_frac=speculate_frac,
+                             fleet_store=fstore)
         wall = _time.perf_counter() - t0
         host.stop_clients()
         recs = {r.config_id: r for r in store.records}
@@ -353,6 +386,41 @@ def fleetpath_smoke_measure(tcs, jc, build, reps: int = 5):
         rwalls.append(wr)
         ratios.append(wr / wa)
     return _median(awalls), _median(rwalls), _median(ratios), recs
+
+
+def fleet_store_smoke_measure(tcs, jc, build, reps: int = 5):
+    """Interleaved cold-fleet vs warm-peer fleetpath pairs (serve mode).
+
+    Per rep: a fresh ``FleetArtifactStore`` is populated by a cold run
+    (round-robin placement, every compile announced), then a *second* run
+    with brand-new clients (empty LRUs, no disk) reuses the same store —
+    every artifact arrives over the wire instead of being recompiled.  The
+    per-pair cold/warm-peer wall ratio is the noise-cancelling CI gate
+    statistic.  Returns (median_cold_wall_s, median_warmpeer_wall_s,
+    median_pair_ratio, cold_compiles, warmpeer_compiles) with compile
+    counts from the last rep.
+    """
+    from repro.core import FleetArtifactStore
+
+    cwalls, wwalls, ratios = [], [], []
+    n_cold = n_warm = 0
+    for _ in range(reps):
+        store = FleetArtifactStore(mode="serve")
+        wc, _, n_cold, _ = run_fleetpath(tcs, jc, build, affinity="off",
+                                         batch_size=6, reps=1,
+                                         fleet_cache="serve",
+                                         fleet_store=store)
+        # warm-peer rides affinity placement (the realistic deployment,
+        # and the same placement bench_fleetpath's warm-local arm uses)
+        ww, _, n_warm, _ = run_fleetpath(tcs, jc, build, affinity="strict",
+                                         batch_size=6, reps=1,
+                                         fleet_cache="serve",
+                                         fleet_store=store)
+        cwalls.append(wc)
+        wwalls.append(ww)
+        ratios.append(wc / ww)
+    return (_median(cwalls), _median(wwalls), _median(ratios),
+            n_cold, n_warm)
 
 
 def run_evalpath(tcs, jc, build, batched: bool, reps: int = 3):

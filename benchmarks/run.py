@@ -17,6 +17,7 @@ import time
 
 from benchmarks.common import (RESULTS, ask_cost_curve, bign_ask_curve,
                                evalpath_workload, explore_generation,
+                               fleet_store_smoke_measure,
                                fleetpath_smoke_measure,
                                fleetpath_smoke_workload, fleetpath_workload,
                                jax_numpy_ehvi_equiv, record_smoke_baseline,
@@ -298,10 +299,17 @@ def bench_fleetpath():
     affinity = strict compile-affinity placement + cold per-client
     persistent cache, warm = the same sweep repeated against the now-warm
     persistent cache (the restarted-client / repeated-sweep case — zero
-    compiles, disk-tier hits only).  Metrics must be bit-identical per
-    config across all arms.  derived = rr wall / affinity wall (acceptance
-    ≥2×); fleet-wide n_compiled must stay ≤1.25× the unique-fingerprint
-    count, and the warm arm must not compile at all.
+    compiles, disk-tier hits only).  Two fleet-store arms (PR 7) ride the
+    same sequence: fleet = cold clients, round-robin placement, but a
+    host-mediated ``FleetArtifactStore`` in serve mode (exactly unique_sw
+    compiles fleet-wide — the store's invariant, vs clients × unique_sw
+    for bare rr), and warm-peer = brand-new clients (cold LRU, no disk)
+    against the already-populated store (zero compiles, every artifact
+    crosses the wire; wall must stay ≤1.3× the warm *local* disk arm).
+    Metrics must be bit-identical per config across all arms.  derived =
+    rr wall / affinity wall (acceptance ≥2×); fleet-wide n_compiled must
+    stay ≤1.25× the unique-fingerprint count, and the warm arm must not
+    compile at all.
     """
     import shutil
     import tempfile
@@ -340,8 +348,41 @@ def bench_fleetpath():
     finally:
         shutil.rmtree(cache_root, ignore_errors=True)
 
+    # fleet-store arms (PR 7): cold round-robin fleet with the host-mediated
+    # artifact store — exactly unique_sw compiles fleet-wide regardless of
+    # placement — then fresh clients against the populated store (warm-peer:
+    # every artifact crosses the wire, zero compiles)
+    from repro.core import FleetArtifactStore
+
+    fleet_root = tempfile.mkdtemp(prefix="jexplore-fleet-")
+    try:
+        best_f = None
+        for rep in range(reps):
+            fstore = FleetArtifactStore(mode="serve")
+            got = run_fleetpath(
+                tcs, jc, build, affinity="off",
+                cache_root=os.path.join(fleet_root, f"rep{rep}"),
+                fleet_cache="serve", fleet_store=fstore)
+            if best_f is None or got[0] < best_f[0]:
+                best_f = got[:3] + (fstore,)
+        wall_f, recs_f, compiles_f, fstore = best_f
+        fleet_stats = fstore.stats()
+        # warm-peer mirrors the warm-local arm's placement (strict
+        # affinity) so the walls differ only in where artifacts come
+        # from: local disk there, the fleet store over the wire here
+        best_wp = None
+        for _ in range(reps):
+            got = run_fleetpath(tcs, jc, build, affinity="strict",
+                                fleet_cache="serve", fleet_store=fstore)
+            if best_wp is None or got[0] < best_wp[0]:
+                best_wp = got[:3]
+        wall_wp, recs_wp, compiles_wp = best_wp
+    finally:
+        shutil.rmtree(fleet_root, ignore_errors=True)
+
     for cid, r in recs_rr.items():
-        for other, name in ((recs_a, "affinity"), (recs_w, "warm")):
+        for other, name in ((recs_a, "affinity"), (recs_w, "warm"),
+                            (recs_f, "fleet"), (recs_wp, "warmpeer")):
             if r.metrics != other[cid].metrics:
                 raise RuntimeError(
                     f"rr/{name} metrics diverge for config {cid}")
@@ -349,11 +390,22 @@ def bench_fleetpath():
         raise RuntimeError(
             f"warm persistent-cache sweep compiled {compiles_w} artifacts "
             f"(expected 0: every fingerprint was already on disk)")
+    if compiles_f != unique_sw:
+        raise RuntimeError(
+            f"cold fleet-store sweep compiled {compiles_f} artifacts "
+            f"(expected exactly {unique_sw}: one per unique fingerprint, "
+            f"any placement)")
+    if compiles_wp != 0:
+        raise RuntimeError(
+            f"warm-peer sweep compiled {compiles_wp} artifacts (expected "
+            f"0: every fingerprint was resident in the fleet store)")
     disk_hits_w = sum(i.get("disk_hits", 0) for i in infos_w)
 
-    # smoke-sized interleaved baseline for benchmarks.ci_smoke
+    # smoke-sized interleaved baselines for benchmarks.ci_smoke
     stcs, sjc, sbuild = fleetpath_smoke_workload()
     wall_sa, wall_sr, smoke_ratio, _ = fleetpath_smoke_measure(
+        stcs, sjc, sbuild)
+    wall_sc, wall_sw, fleet_smoke_ratio, _, _ = fleet_store_smoke_measure(
         stcs, sjc, sbuild)
     if os.environ.get("SMOKE_RECORD"):
         baseline_path = record_smoke_baseline({
@@ -361,7 +413,11 @@ def bench_fleetpath():
             "fleetpath_affinity_smoke_evals_per_s":
                 round(len(stcs) / wall_sa, 1),
             "fleetpath_rr_smoke_evals_per_s":
-                round(len(stcs) / wall_sr, 1)})
+                round(len(stcs) / wall_sr, 1),
+            "fleet_store_cold_vs_warmpeer_ratio":
+                round(fleet_smoke_ratio, 3),
+            "fleet_store_warmpeer_smoke_evals_per_s":
+                round(len(stcs) / wall_sw, 1)})
         print(f"#   fleetpath smoke baseline recorded -> {baseline_path}")
 
     speedup = wall_rr / wall_a
@@ -374,10 +430,19 @@ def bench_fleetpath():
     print(f"#   affinity+cold cache   : {wall_a * 1e3:8.1f} ms wall, "
           f"{compiles_a} fleet compiles ({compile_ratio:.2f}x unique; "
           f"target <= 1.25x)")
+    warmpeer_vs_warmlocal = wall_wp / wall_w
     print(f"#   warm persistent cache : {wall_w * 1e3:8.1f} ms wall, "
           f"{compiles_w} compiles, {disk_hits_w} disk hits")
+    print(f"#   fleet store (cold, rr): {wall_f * 1e3:8.1f} ms wall, "
+          f"{compiles_f} fleet compiles (== {unique_sw} unique), "
+          f"{fleet_stats['fleet_hits']} store hits, "
+          f"{fleet_stats['fleet_served_mb']:.2f} MB served")
+    print(f"#   warm peer (store only): {wall_wp * 1e3:8.1f} ms wall, "
+          f"{compiles_wp} compiles, {warmpeer_vs_warmlocal:.2f}x warm-local "
+          f"(target <= 1.3x)")
     print(f"#   smoke ({len(stcs)} cfg) rr/affinity ratio = "
-          f"{smoke_ratio:.2f}")
+          f"{smoke_ratio:.2f}, fleet cold/warm-peer ratio = "
+          f"{fleet_smoke_ratio:.2f}")
     print(f"#   speedup = {speedup:.2f}x (rr vs affinity+cache; "
           f"target >= 2x)")
     return wall_a / N_SAMPLES * 1e6, speedup, {
@@ -392,6 +457,14 @@ def bench_fleetpath():
         "fleetpath_warm_disk_hits": disk_hits_w,
         "fleetpath_compile_ratio": round(compile_ratio, 3),
         "fleetpath_smoke_ratio": round(smoke_ratio, 3),
+        "fleetpath_fleet_wall_ms": round(wall_f * 1e3, 1),
+        "fleetpath_fleet_compiles": compiles_f,
+        "fleetpath_fleet_hits": fleet_stats["fleet_hits"],
+        "fleetpath_fleet_served_mb": fleet_stats["fleet_served_mb"],
+        "fleetpath_warmpeer_wall_ms": round(wall_wp * 1e3, 1),
+        "fleetpath_warmpeer_compiles": compiles_wp,
+        "fleetpath_warmpeer_vs_warmlocal": round(warmpeer_vs_warmlocal, 3),
+        "fleet_store_smoke_ratio": round(fleet_smoke_ratio, 3),
     }
 
 

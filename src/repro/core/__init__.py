@@ -6,6 +6,7 @@ JMeasure measures; results stream to CSV.  See DESIGN.md.
 from repro.core.space import DesignSpace, Knob, tpu_pod_space, KIND_HW, KIND_SW
 from repro.core.jconfig import JConfig, TestConfig
 from repro.core.jmeasure import JMeasure, JTime, JPower, JMemory, DEFAULT_MEASURES
+from repro.core.fleet import FleetArtifactStore
 from repro.core.jclient import JClient
 from repro.core.jhost import JHost
 from repro.core.results import ResultRecord, ResultStore, nondominated_mask

@@ -23,6 +23,13 @@ the transport, the scheduler, and the ResultStore:
     (normally ``JConfig.cache_key``) the scheduler tracks which sw
     fingerprints each client holds compiled and routes same-fingerprint
     chunks back to that client (see ``repro.core.scheduler``);
+  * fleet artifact store — with a ``fleet_store``
+    (``repro.core.fleet.FleetArtifactStore``) the loop intercepts
+    ``artifact_*`` frames from the result stream and feeds them to the
+    store, which serves/relays compiled artifacts between clients and
+    enforces exactly-one-compile-per-fingerprint fleet-wide; the
+    scheduler additionally treats fleet-resident fingerprints as free
+    riders when homing compile groups;
   * result saving — every result lands in a ResultStore (CSV streaming);
   * async search overlap — when ``search`` is a ``SearchDriver`` (it
     exposes ``poll_ask``/``note_demand``), the loop feeds the scheduler's
@@ -40,11 +47,12 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.fleet import FleetArtifactStore
 from repro.core.jconfig import TestConfig
 from repro.core.results import ResultRecord, ResultStore
 from repro.core.scheduler import DispatchScheduler
 from repro.core.search.base import SearchAlgorithm
-from repro.core.transport import HostTransport
+from repro.core.transport import HostTransport, is_artifact_msg
 
 
 class JHost:
@@ -75,7 +83,14 @@ class JHost:
                 speculate_frac: Optional[float] = None,
                 speculate_slow_mult: Optional[float] = None,
                 pipeline_depth: Optional[int] = None,
+                fleet_store: Optional[FleetArtifactStore] = None,
                 scheduler: Optional[DispatchScheduler] = None) -> ResultStore:
+        # fleet residency consult for affinity dispatch: a fingerprint the
+        # fleet store can serve is a fetch, not a compile, wherever it lands
+        fleet_resident_fn = None
+        if fleet_store is not None and fingerprint_fn is not None:
+            fleet_resident_fn = \
+                lambda fp, _fs=fleet_store: _fs.resident_fp(repr(fp))
         sched = scheduler if scheduler is not None else DispatchScheduler(
             self.transport.client_ids(), policy=dispatch,
             timeout_s=self.timeout_s, max_retries=self.max_retries,
@@ -86,7 +101,8 @@ class JHost:
             client_cache_size=client_cache_size,
             speculate_frac=speculate_frac,
             speculate_slow_mult=speculate_slow_mult,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            fleet_resident_fn=fleet_resident_fn)
         self.scheduler = sched
         self.quarantined = sched.quarantined   # shared set, stays live
         sched.wire_stats_fn = getattr(self.transport, "wire_summary", None)
@@ -130,6 +146,15 @@ class JHost:
                 self.transport.push_many(client, [tc.to_wire() for tc in tcs])
 
             msgs = self.transport.pull_many(self.poll_s)
+            if fleet_store is not None:
+                # artifact traffic rides the same sockets as results but is
+                # the store's business, not the scheduler's
+                arts = [m for m in msgs if is_artifact_msg(m)]
+                if arts:
+                    msgs = [m for m in msgs if not is_artifact_msg(m)]
+                    for m in arts:
+                        fleet_store.on_message(m, self.transport.push)
+                fleet_store.tick(self.transport.push)
             if msgs:
                 sched.note_results()   # frame boundary: coalescing detection
             for msg in msgs:

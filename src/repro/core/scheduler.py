@@ -251,6 +251,8 @@ class DispatchScheduler:
                  speculate_frac: Optional[float] = None,
                  speculate_slow_mult: Optional[float] = None,
                  pipeline_depth: Optional[int] = None,
+                 fleet_resident_fn: Optional[Callable[[Hashable],
+                                                      bool]] = None,
                  clock: Callable[[], float] = time.monotonic):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
@@ -283,6 +285,12 @@ class DispatchScheduler:
         self.fingerprint_fn = fingerprint_fn
         self.speculate_frac = speculate_frac
         self.speculate_slow_mult = speculate_slow_mult
+        # fleet artifact store consult: fingerprint -> "resident somewhere
+        # in the fleet" (host blob cache / peer disk / compile in flight).
+        # A fleet-resident group costs a fetch, not a compile, wherever it
+        # lands — so it neither binds placement nor consumes the
+        # one-fresh-compile-group-per-chunk budget
+        self.fleet_resident_fn = fleet_resident_fn
         self.clock = clock
         # before any EWMA exists: the static batch_size, or a modest seed
         # chunk when only a budget was given (it adapts from there)
@@ -301,6 +309,7 @@ class DispatchScheduler:
         self.n_fp_chunks = 0        # chunks whose fingerprints were known
         self.n_affine_chunks = 0    # ... placed on a client already holding
         #                             their leading fingerprint
+        self.n_fleet_rides = 0      # fresh groups taken free: fleet-resident
         self.n_speculated = 0       # mirror chunks dispatched (all kinds)
         self.n_spec_wins_primary = 0
         self.n_spec_wins_mirror = 0
@@ -415,18 +424,20 @@ class DispatchScheduler:
         per-fingerprint buckets.
 
         Groups are ranked: resident in this slot's shadow first (largest
-        first — tightest compile packing), then groups resident on no
-        healthy client (this slot becomes their home), then — only in
-        ``prefer`` mode and only when the slot is completely idle — groups
-        resident on another healthy client.  Whole groups are taken
-        head-first until the chunk is full, so a dispatch is at most a few
-        compile groups — and at most ONE of them not yet compiled anywhere:
-        padding a chunk with the head of a second fresh group would claim
-        it for this client, skewing group ownership across the fleet and
-        serializing its compiles here; resident groups, by contrast, are
-        free riders.
+        first — tightest compile packing), then groups the *fleet store*
+        already holds (a fetch, not a compile, wherever they land), then
+        groups resident on no healthy client (this slot becomes their
+        home), then — only in ``prefer`` mode and only when the slot is
+        completely idle — groups resident on another healthy client.
+        Whole groups are taken head-first until the chunk is full, so a
+        dispatch is at most a few compile groups — and at most ONE of them
+        not yet compiled anywhere: padding a chunk with the head of a
+        second fresh group would claim it for this client, skewing group
+        ownership across the fleet and serializing its compiles here;
+        resident groups — shadow- or fleet-resident — are free riders.
         """
         here: List[Hashable] = []
+        fleet: List[Hashable] = []
         unclaimed: List[Hashable] = []
         elsewhere: List[Hashable] = []
         for fp, q in groups.items():
@@ -434,6 +445,8 @@ class DispatchScheduler:
                 continue
             if fp is not None and fp in slot.shadow:
                 here.append(fp)
+            elif fp is not None and self._fleet_resident(fp):
+                fleet.append(fp)         # fetchable anywhere: free rider
             elif fp is not None and any(
                     fp in s.shadow for s in self.slots.values()
                     if s is not slot and not s.quarantined):
@@ -441,22 +454,37 @@ class DispatchScheduler:
             else:
                 unclaimed.append(fp)     # no affinity signal: first taker
         here.sort(key=lambda f: -len(groups[f]))
-        ranked = here + unclaimed
+        fleet.sort(key=lambda f: -len(groups[f]))
+        ranked = here + fleet + unclaimed
         if self.affinity == "prefer" and not slot.chunks:
             ranked += elsewhere          # steal rather than idle
+        fleet_set = set(fleet)
         taken: List[Tuple[TestConfig, int]] = []
         new_group_taken = False
         for fp in ranked:
             if len(taken) >= size:
                 break
-            if not (fp is not None and fp in slot.shadow):
+            free = (fp is not None and fp in slot.shadow) or fp in fleet_set
+            if not free:
                 if new_group_taken:      # one fresh compile group per chunk
                     continue
                 new_group_taken = True
             q = groups[fp]
+            took_any = False
             while q and len(taken) < size:
                 taken.append(q.popleft()[1])
+                took_any = True
+            if took_any and fp in fleet_set:
+                self.n_fleet_rides += 1
         return taken
+
+    def _fleet_resident(self, fp: Hashable) -> bool:
+        if self.fleet_resident_fn is None:
+            return False
+        try:
+            return bool(self.fleet_resident_fn(fp))
+        except Exception:
+            return False  # a stats probe must never take dispatch down
 
     def _dispatch(self, slot: ClientSlot,
                   items: List[Tuple[TestConfig, int]]) -> List[TestConfig]:
@@ -823,6 +851,8 @@ class DispatchScheduler:
             s["affine_chunks"] = self.n_affine_chunks
             s["shadow_sizes"] = {c: len(sl.shadow)
                                  for c, sl in self.slots.items()}
+        if self.fleet_resident_fn is not None:
+            s["fleet_rides"] = self.n_fleet_rides
         if self.speculate_frac is not None or \
                 self.speculate_slow_mult is not None:
             s["speculated"] = self.n_speculated

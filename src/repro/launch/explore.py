@@ -105,6 +105,14 @@ def parse_args():
                         "<cache-dir>/client<i>/ so restarted clients and "
                         "repeated sweeps skip the compile (layout + "
                         "invalidation rules: repro.core.jclient docstring)")
+    p.add_argument("--fleet-cache", default="off",
+                   choices=["off", "serve", "relay"],
+                   help="fleet-wide artifact store: clients missing both "
+                        "local cache tiers fetch peers' compiled artifacts "
+                        "through the host instead of recompiling (serve: "
+                        "host keeps a blob cache; relay: host forwards "
+                        "fetches to the resident peer), so N clients x F "
+                        "fingerprints costs exactly F compiles")
     p.add_argument("--max-stale-tells", type=int, default=None,
                    help="with --async-search: discard precomputed asks "
                         "lagging the model by more than this many folded "
@@ -217,9 +225,11 @@ def main():
     build_fn = make_build_fn(args, jc)
     # each client gets its own persistent-cache subtree, like each board
     # owning its own disk on a real fleet
+    fleet_mode = None if args.fleet_cache == "off" else args.fleet_cache
     clients = [JClient(jc, build_fn, transport=pair.client(i), client_id=i,
                        cache_dir=(None if args.cache_dir is None else
-                                  os.path.join(args.cache_dir, f"client{i}")))
+                                  os.path.join(args.cache_dir, f"client{i}")),
+                       fleet_mode=fleet_mode)
                for i in range(args.clients)]
     threads = [threading.Thread(target=c.serve,
                                 kwargs=dict(poll_s=0.1, idle_limit_s=None),
@@ -237,6 +247,11 @@ def main():
                 "hyper_refresh_every": args.gp_refresh,
                 "inducing_threshold": args.gp_inducing}
                if args.algorithm in ("bayesopt", "pal") else {})
+    fleet_store = None
+    if fleet_mode is not None:
+        from repro.core import FleetArtifactStore
+
+        fleet_store = FleetArtifactStore(mode=fleet_mode)
     algo = ALGORITHMS[args.algorithm](space, seed=args.seed, **algo_kw)
     search = algo
     if args.async_search:
@@ -254,10 +269,12 @@ def main():
                      fingerprint_fn=(jc.cache_key if args.affinity != "off"
                                      or args.speculate_at is not None
                                      or args.speculate_slow_mult is not None
+                                     or fleet_store is not None
                                      else None),
                      speculate_frac=args.speculate_at,
                      speculate_slow_mult=args.speculate_slow_mult,
-                     pipeline_depth=args.pipeline_depth)
+                     pipeline_depth=args.pipeline_depth,
+                     fleet_store=fleet_store)
     finally:
         if search is not algo:
             print(f"[explore] search driver: {search.stats()}")
@@ -273,6 +290,13 @@ def main():
     print(f"[explore] {len(ok)} configs in {dt:.1f}s "
           f"({len(ok) / max(dt, 1e-9):.1f} evals/s; {compiles} compiles, "
           f"{len(ok)-compiles} cache hits)")
+    if args.cache_dir is not None or fleet_store is not None:
+        from repro.launch.report import cache_effectiveness
+
+        line, _ = cache_effectiveness(
+            [c.cache_info() for c in clients],
+            fleet_store.stats() if fleet_store is not None else None)
+        print(f"[explore] {line}")
     print(f"[explore] pareto front size = {len(front)}, "
           f"hypervolume = {hypervolume(pts, ref):.4g}")
     print(f"[explore] time range  [{pts[:,0].min():.3f}, {pts[:,0].max():.3f}] s")

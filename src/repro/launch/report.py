@@ -1,5 +1,6 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
-results/dryrun.jsonl.
+results/dryrun.jsonl, plus end-of-run reporting helpers shared by
+``launch.explore`` and the benchmark harness (``cache_effectiveness``).
 
     PYTHONPATH=src python -m repro.launch.report [--in results/dryrun.jsonl]
 """
@@ -8,6 +9,44 @@ from __future__ import annotations
 import argparse
 import json
 from collections import defaultdict
+
+
+def cache_effectiveness(cache_infos, fleet_stats=None):
+    """Fold per-client ``JClient.cache_info()`` dicts (+ optional
+    ``FleetArtifactStore.stats()``) into one human summary line and a flat
+    totals dict (the ``results/bench.json`` fleet-row payload).
+
+    Tier semantics: ``hits``/``misses`` are the in-memory LRU, ``disk_*``
+    the persistent tier, ``fleet_*`` the host-mediated store; byte counters
+    are summed across clients.
+    """
+    totals = defaultdict(int)
+    for ci in cache_infos or ():
+        for k, v in (ci or {}).items():
+            if k == "maxsize":
+                continue
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                totals[k] += v
+    out = dict(totals)
+    out["n_clients"] = len(cache_infos or ())
+    parts = [f"lru {out.get('hits', 0)}/{out.get('hits', 0) + out.get('misses', 0)} hits"]
+    if "disk_hits" in out:
+        parts.append(f"disk {out['disk_hits']}/"
+                     f"{out['disk_hits'] + out.get('disk_misses', 0)} hits")
+    if "fleet_hits" in out:
+        mb_in = out.get("fleet_bytes_in", 0) / 1e6
+        parts.append(f"fleet {out['fleet_hits']}/"
+                     f"{out['fleet_hits'] + out.get('fleet_misses', 0)} hits "
+                     f"({mb_in:.2f} MB fetched)")
+    if fleet_stats:
+        for k, v in fleet_stats.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"store_{k.replace('fleet_', '')}"] = v
+        parts.append(f"store {fleet_stats.get('fleet_mode', '?')}: "
+                     f"{fleet_stats.get('fleet_hits', 0)} served, "
+                     f"{fleet_stats.get('fleet_misses', 0)} compiles assigned, "
+                     f"{fleet_stats.get('fleet_served_mb', 0.0):.2f} MB out")
+    return "cache: " + ", ".join(parts), out
 
 
 def load(path, variant="baseline"):

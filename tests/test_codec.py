@@ -172,6 +172,102 @@ def test_oversize_ints_fall_back_to_json_column():
 
 
 # ---------------------------------------------------------------------------
+# bytes payloads (artifact blobs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("blob", [
+    b"",                                       # empty blob
+    b"\x00\xff\xfe\x93" * 7,                   # non-UTF8, contains MAGIC byte
+    np.random.default_rng(0).bytes(2 << 20),   # large (2 MiB) engine-sized
+], ids=["empty", "non_utf8", "large"])
+def test_bytes_scalar_roundtrip_both_codecs(blob):
+    msg = {"cmd": "artifact_put", "addr": "deadbeef", "blob": blob,
+           "client_id": 3}
+    for codec in CODECS:
+        back = decode_wire(codec.encode(msg))
+        assert back == msg, codec.name
+        assert isinstance(back["blob"], bytes), codec.name
+
+
+def test_bytes_column_roundtrip_with_length_table():
+    """Uniform bytes lists pack per-element (tag "Y"); ragged lengths and
+    empty elements must survive exactly."""
+    rng = np.random.default_rng(1)
+    msg = {"cmd": "artifact_chunk", "addr": "cafe",
+           "chunks": [rng.bytes(int(n)) for n in (0, 1, 4096, 17)]}
+    for codec in CODECS:
+        back = decode_wire(codec.encode(msg))
+        assert back == msg, codec.name
+        assert all(isinstance(c, bytes) for c in back["chunks"]), codec.name
+
+
+def test_bytearray_encodes_and_decodes_as_bytes():
+    msg = {"blob": bytearray(b"\x01\x02\x93\x00")}
+    for codec in CODECS:
+        back = decode_wire(codec.encode(msg))
+        assert back["blob"] == bytes(msg["blob"]), codec.name
+        assert isinstance(back["blob"], bytes), codec.name
+
+
+def test_mixed_bytes_and_numeric_columnar_frame():
+    """A frame carrying both typed numeric columns and a raw blob must pack
+    both through the binary container and stay lossless under JSON."""
+    n = 64
+    rng = np.random.default_rng(2)
+    frame = frame_batch([
+        {"config_id": i, "x": float(rng.random()),
+         "metrics": {"time_s": float(rng.random())}} for i in range(n)])
+    frame["blob"] = rng.bytes(100_000)
+    bin_wire = BINARY_CODEC.encode(frame)
+    assert bin_wire[:len(MAGIC)] == MAGIC
+    for codec in CODECS:
+        back = decode_wire(codec.encode(frame))
+        assert back == frame, codec.name
+        assert unframe_batch({k: v for k, v in back.items()
+                              if k != "blob"}) is not None, codec.name
+
+
+def test_binary_blob_avoids_base64_inflation():
+    """The whole point of the raw-blob segment: wire size tracks blob size,
+    while the JSON fallback pays the ~33% base64 tax (but still works)."""
+    blob = np.random.default_rng(3).bytes(1 << 20)
+    msg = {"cmd": "artifact_put", "addr": "ab" * 32, "blob": blob}
+    bin_wire = BINARY_CODEC.encode(msg)
+    json_wire = JSON_CODEC.encode(msg)
+    assert len(bin_wire) < len(blob) + 1024          # header-only overhead
+    assert len(json_wire) > len(blob) * 1.30         # base64 inflation
+    # JSON fallback is real JSON text with the tagged wrapper
+    doc = json.loads(json_wire.decode("utf-8"))
+    assert doc["blob"].keys() == {"__b64__"}
+    assert decode_wire(json_wire) == msg
+    assert decode_wire(bin_wire) == msg
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_codec_roundtrip_random_bytes_frames(seed):
+    """Property: any mix of scalar blobs, bytes columns, numeric columns and
+    nested dicts round-trips byte-exactly through both codecs."""
+    rng = np.random.default_rng(seed)
+    msg = {"cmd": "artifact_put", "seq": int(rng.integers(10 ** 6))}
+    if rng.random() < 0.8:
+        msg["blob"] = rng.bytes(int(rng.integers(0, 5000)))
+    if rng.random() < 0.5:
+        msg["chunks"] = [rng.bytes(int(rng.integers(0, 200)))
+                         for _ in range(int(rng.integers(1, 6)))]
+    if rng.random() < 0.5:
+        msg["xs"] = [float(rng.standard_normal())
+                     for _ in range(int(rng.integers(1, 40)))]
+    if rng.random() < 0.5:
+        msg["meta"] = {"inner": rng.bytes(int(rng.integers(0, 300))),
+                       "n": int(rng.integers(100))}
+    for codec in CODECS:
+        back = decode_wire(codec.encode(msg))
+        assert back == msg, codec.name
+
+
+# ---------------------------------------------------------------------------
 # negotiation: binary host ↔ json client
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,467 @@
+"""Fleet-wide artifact store (PR 7): host-side query/serve/relay protocol,
+designated-compiler serialization (exactly-F compiles), passive prefetch,
+chunked blob streaming, client-side fetch/announce/serve-fetch plumbing,
+scheduler free-rider placement, and end-to-end serve/relay explorations."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (DispatchScheduler, FleetArtifactStore, JClient,
+                        JConfig, JHost, ResultStore, TestConfig, transport)
+from repro.core.transport import (ARTIFACT_CHUNK, ARTIFACT_FETCH,
+                                  ARTIFACT_MISS, ARTIFACT_PUT,
+                                  ARTIFACT_QUERY, chunk_blob)
+from repro.core.space import DesignSpace, KIND_HW, KIND_SW, Knob
+from repro.roofline.analysis import Artifact
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def toy_artifact(f=5e12, n_dev=256):
+    return Artifact(flops_per_device=f, bytes_per_device=2e10,
+                    wire_bytes_per_device=1e8, collectives={},
+                    arg_bytes=10 ** 9, temp_bytes=10 ** 8,
+                    output_bytes=10 ** 6, n_devices=n_dev)
+
+
+def small_space(n_fps=4):
+    return DesignSpace([
+        Knob("clock_scale", (0.5, 1.0), KIND_HW),
+        Knob("blk", tuple(range(n_fps)), KIND_SW),
+    ])
+
+
+def counting_build(jc):
+    calls = []
+
+    def build(tc):
+        calls.append(jc.cache_key(tc))
+        h = hash(jc.cache_key(tc)) % 7 + 1
+        return toy_artifact(5e12 * h), {
+            "decode_artifact": toy_artifact(1e11 * h),
+            "n_decode_tokens": 10}
+
+    return build, calls
+
+
+def recorder():
+    """A fake host push: collect (client_id, msg) pairs."""
+    pushes = []
+    return pushes, lambda cid, msg: pushes.append((cid, msg))
+
+
+def put_frame(addr, cid=0, blob=b"engine-bytes", **extra):
+    return {"cmd": ARTIFACT_PUT, "addr": addr, "fp": f"fp-{addr}",
+            "client_id": cid, "blob": blob, **extra}
+
+
+def query_frame(addr, cid, **extra):
+    return {"cmd": ARTIFACT_QUERY, "addr": addr, "fp": f"fp-{addr}",
+            "client_id": cid, **extra}
+
+
+# ---------------------------------------------------------------------------
+# FleetArtifactStore unit tests (transport-free, fake push + fake clock)
+# ---------------------------------------------------------------------------
+
+
+def test_first_query_assigns_compiler_later_queries_park():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    store.on_message(query_frame("aa", 0), push)
+    assert pushes == [(0, {"cmd": ARTIFACT_MISS, "addr": "aa"})]
+    # second and third askers park behind the in-flight compile: no reply
+    store.on_message(query_frame("aa", 1), push)
+    store.on_message(query_frame("aa", 2), push)
+    assert len(pushes) == 1
+    assert store.n_misses == 1 and store.n_waits == 2
+    # the compiler's PUT serves every waiter the blob
+    store.on_message(put_frame("aa", cid=0), push)
+    served = [(cid, m) for cid, m in pushes[1:]]
+    assert sorted(cid for cid, _ in served) == [1, 2]
+    assert all(m["cmd"] == ARTIFACT_PUT and m["blob"] == b"engine-bytes"
+               for _, m in served)
+    assert store.n_hits == 2
+
+
+def test_serve_mode_caches_blob_for_later_queries():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    store.on_message(put_frame("aa", cid=0), push)
+    store.on_message(query_frame("aa", 3), push)
+    assert pushes[-1][0] == 3
+    assert pushes[-1][1]["cmd"] == ARTIFACT_PUT
+    assert pushes[-1][1]["blob"] == b"engine-bytes"
+    assert store.n_hits == 1 and store.n_misses == 0
+    assert store.resident_fp("fp-aa")
+    assert not store.resident_fp("fp-unknown")
+
+
+def test_designated_compiler_requery_reconfirms_miss():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    store.on_message(query_frame("aa", 0), push)
+    store.on_message(query_frame("aa", 0), push)   # e.g. after timed-out wait
+    assert pushes == [(0, {"cmd": ARTIFACT_MISS, "addr": "aa"})] * 2
+    assert store.n_misses == 1                     # not a second assignment
+
+
+def test_spec_query_never_assigns_compile_duty():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    store.on_message(query_frame("aa", 0, spec=True), push)
+    assert pushes == [(0, {"cmd": ARTIFACT_MISS, "addr": "aa",
+                           "spec": True})]
+    assert store.n_misses == 0 and not store._pending
+    # the later *active* query still gets the assignment
+    store.on_message(query_frame("aa", 1), push)
+    assert pushes[-1] == (1, {"cmd": ARTIFACT_MISS, "addr": "aa"})
+    assert store.n_misses == 1
+
+
+def test_spec_query_joins_waiters_and_still_answers():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    store.on_message(query_frame("aa", 0), push)              # compiler
+    store.on_message(query_frame("aa", 1, spec=True), push)   # passive
+    # answered immediately (spec MISS) *and* parked as waiter
+    assert pushes[-1] == (1, {"cmd": ARTIFACT_MISS, "addr": "aa",
+                              "spec": True})
+    assert store._pending["aa"]["waiters"] == [1]
+    store.on_message(put_frame("aa", cid=0), push)
+    assert pushes[-1][0] == 1 and pushes[-1][1]["cmd"] == ARTIFACT_PUT
+
+
+def test_relay_mode_round_trips_via_resident_peer():
+    pushes, push = recorder()
+    store = FleetArtifactStore("relay")
+    # residency-only announcement: no blob retained by the host
+    store.on_message({"cmd": ARTIFACT_PUT, "addr": "aa", "fp": "fp-aa",
+                      "client_id": 0}, push)
+    assert store.residency["aa"] == {0} and not store._blobs
+    store.on_message(query_frame("aa", 1), push)
+    assert pushes[-1][0] == 0
+    assert pushes[-1][1]["cmd"] == ARTIFACT_FETCH
+    assert store.n_relays == 1
+    # the peer's blob PUT is forwarded to the waiter, still not retained
+    store.on_message(put_frame("aa", cid=0), push)
+    assert pushes[-1][0] == 1
+    assert pushes[-1][1]["cmd"] == ARTIFACT_PUT
+    assert pushes[-1][1]["blob"] == b"engine-bytes"
+    assert not store._blobs
+
+
+def test_relay_gone_fails_waiters_over_to_compile():
+    pushes, push = recorder()
+    store = FleetArtifactStore("relay")
+    store.on_message({"cmd": ARTIFACT_PUT, "addr": "aa", "fp": "fp-aa",
+                      "client_id": 0}, push)
+    store.on_message(query_frame("aa", 1), push)
+    store.on_message({"cmd": ARTIFACT_PUT, "addr": "aa", "client_id": 0,
+                      "status": "gone"}, push)
+    assert pushes[-1] == (1, {"cmd": ARTIFACT_MISS, "addr": "aa"})
+    assert store.n_gone == 1
+    assert store.residency["aa"] == set()          # claim dropped
+
+
+def test_tick_expires_stale_assignment():
+    clk = FakeClock()
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve", pending_timeout_s=10.0, clock=clk)
+    store.on_message(query_frame("aa", 0), push)
+    store.on_message(query_frame("aa", 1), push)   # waiter
+    clk.advance(5.0)
+    store.tick(push)
+    assert store.n_expired == 0                    # not yet
+    clk.advance(6.0)
+    store.tick(push)
+    assert store.n_expired == 1 and not store._pending
+    assert pushes[-1] == (1, {"cmd": ARTIFACT_MISS, "addr": "aa"})
+
+
+def test_blob_cache_lru_eviction_by_bytes():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve", max_bytes=250)
+    for i in range(4):
+        store.on_message(put_frame(f"a{i}", cid=0, blob=bytes(100)), push)
+    assert store.n_evictions == 2
+    assert set(store._blobs) == {"a2", "a3"}       # oldest evicted first
+    assert store._blob_bytes == 200
+    # a served blob is LRU-touched: a0 is gone, a2 survives the next insert
+    store.on_message(query_frame("a2", 1), push)
+    store.on_message(put_frame("a4", cid=0, blob=bytes(100)), push)
+    assert set(store._blobs) == {"a2", "a4"}
+
+
+def test_chunked_put_reassembles_on_host():
+    pushes, push = recorder()
+    store = FleetArtifactStore("serve")
+    blob = np.random.default_rng(0).bytes(2500)
+    base = {"addr": "aa", "fp": "fp-aa", "client_id": 0}
+    frames = chunk_blob(base, blob, 1000)
+    assert len(frames) == 3
+    assert all(f["cmd"] == ARTIFACT_CHUNK for f in frames)
+    for f in frames:
+        store.on_message(f, push)
+    assert store._blobs["aa"] == blob
+    store.on_message(query_frame("aa", 2), push)
+    # served back out as a chunk run under the store's own chunk size
+    small = FleetArtifactStore("serve", chunk_bytes=1000)
+    small.on_message(put_frame("bb", cid=0, blob=blob), push)
+    pushes.clear()
+    small.on_message(query_frame("bb", 2), push)
+    assert [m["cmd"] for _, m in pushes] == [ARTIFACT_CHUNK] * 3
+    assert b"".join(m["blob"] for _, m in pushes) == blob
+
+
+# ---------------------------------------------------------------------------
+# JClient fleet tier (loopback, no serve thread: replies staged up front)
+# ---------------------------------------------------------------------------
+
+
+def fleet_client(pair, jc, build, cid=0, mode="serve", **kw):
+    return JClient(jc, build, transport=pair.client(cid), client_id=cid,
+                   fleet_mode=mode, fleet_timeout_s=2.0, **kw)
+
+
+def staged_pair_and_key(n_fps=4):
+    space = small_space(n_fps)
+    jc = JConfig(space, n_chips=8)
+    build, calls = counting_build(jc)
+    rng = np.random.default_rng(0)
+    tc = TestConfig(0, "a", "s", space.sample(rng))
+    return transport.LoopbackPair(2), jc, build, calls, tc
+
+
+def test_fleet_fetch_adopts_peer_blob():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    peer = fleet_client(pair, jc, build, cid=1)
+    key = jc.cache_key(tc)
+    built = build(tc)
+    blob = peer._payload_blob(key, built)
+    me = fleet_client(pair, jc, build, cid=0)
+    # stage the host's reply before the (blocking) fetch
+    pair.host().push(0, put_frame(me._addr(key), cid=1, blob=blob))
+    got = me._fleet_fetch(key)
+    assert got == built
+    # the query went up the wire first
+    q = pair.to_host.get(timeout=1.0)
+    assert transport.decode_wire(q)["cmd"] == ARTIFACT_QUERY
+
+
+def test_fleet_fetch_miss_makes_designated_compiler():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    me = fleet_client(pair, jc, build, cid=0)
+    key = jc.cache_key(tc)
+    addr = me._addr(key)
+    host_t = pair.host()
+    # a stale passive MISS must NOT be read as the assignment
+    host_t.push(0, {"cmd": ARTIFACT_MISS, "addr": addr, "spec": True})
+    host_t.push(0, {"cmd": ARTIFACT_MISS, "addr": addr})
+    assert me._fleet_fetch(key) is None
+
+
+def test_fetch_wait_serves_relayed_fetch_inline():
+    """The deadlock killer: an ARTIFACT_FETCH arriving mid-wait is answered
+    immediately, not backlogged behind the blocked fetch."""
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    me = fleet_client(pair, jc, build, cid=0, mode="relay")
+    held_tc = TestConfig(1, "a", "s", dict(tc.knobs, blk=(tc.knobs["blk"]
+                                                          + 1) % 4))
+    held_key = jc.cache_key(held_tc)
+    me._addr_key[me._addr(held_key)] = held_key
+    me._cache_insert(held_key, build(held_tc))
+    want_key = jc.cache_key(tc)
+    host_t = pair.host()
+    host_t.push(0, {"cmd": ARTIFACT_FETCH, "addr": me._addr(held_key)})
+    host_t.push(0, {"cmd": ARTIFACT_MISS, "addr": me._addr(want_key)})
+    assert me._fleet_fetch(want_key) is None
+    # host received: the QUERY, then the served blob for the relayed fetch
+    frames = [transport.decode_wire(pair.to_host.get(timeout=1.0))
+              for _ in range(2)]
+    assert frames[0]["cmd"] == ARTIFACT_QUERY
+    assert frames[1]["cmd"] == ARTIFACT_PUT
+    assert frames[1]["addr"] == me._addr(held_key)
+    assert isinstance(frames[1]["blob"], bytes)
+
+
+def test_fetch_wait_backlogs_non_artifact_frames():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    me = fleet_client(pair, jc, build, cid=0)
+    key = jc.cache_key(tc)
+    host_t = pair.host()
+    host_t.push(0, {"cmd": "whatever", "x": 1})
+    host_t.push(0, {"cmd": ARTIFACT_MISS, "addr": me._addr(key)})
+    assert me._fleet_fetch(key) is None
+    assert me._rx_backlog == [{"cmd": "whatever", "x": 1}]
+    assert me._pull(0.0) == {"cmd": "whatever", "x": 1}  # drained first
+
+
+def test_serve_fetch_answers_gone_when_not_held():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    me = fleet_client(pair, jc, build, cid=0, mode="relay")
+    me._serve_fetch("deadbeef")
+    got = transport.decode_wire(pair.to_host.get(timeout=1.0))
+    assert got["cmd"] == ARTIFACT_PUT and got["status"] == "gone"
+
+
+def test_prefetch_adopts_blob_and_ignores_spec_miss():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    peer = fleet_client(pair, jc, build, cid=1)
+    kA = jc.cache_key(tc)
+    tcB = TestConfig(1, "a", "s", dict(tc.knobs, blk=(tc.knobs["blk"]
+                                                      + 1) % 4))
+    kB = jc.cache_key(tcB)
+    built = build(tc)
+    me = fleet_client(pair, jc, build, cid=0)
+    host_t = pair.host()
+    host_t.push(0, put_frame(me._addr(kA), cid=1,
+                             blob=peer._payload_blob(kA, built)))
+    host_t.push(0, {"cmd": ARTIFACT_MISS, "addr": me._addr(kB),
+                    "spec": True})
+    me._fleet_prefetch([kA, kB])
+    assert me._cache[kA] == built
+    info = me.cache_info()
+    assert info["fleet_hits"] == 1
+    # a spec MISS is not compile duty: no miss counted, nothing skipped
+    assert info["fleet_misses"] == 0 and kB not in me._fleet_skip
+
+
+def test_prefetch_active_miss_claims_compile_duty():
+    pair, jc, build, calls, tc = staged_pair_and_key()
+    me = fleet_client(pair, jc, build, cid=0)
+    key = jc.cache_key(tc)
+    pair.host().push(0, {"cmd": ARTIFACT_MISS, "addr": me._addr(key)})
+    me._fleet_prefetch([key])
+    assert key in me._fleet_skip
+    assert me.cache_info()["fleet_misses"] == 1
+    # _artifact honors the claim: builds without re-querying the fleet
+    got = me._artifact(key, tc)
+    assert me.n_compiled == 1 and key not in me._fleet_skip
+    assert got == build(tc)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: fleet-resident groups are free riders
+# ---------------------------------------------------------------------------
+
+
+def ftc(i, fp):
+    return TestConfig(i, "a", "s", {"x": i, "sw": fp})
+
+
+def test_fleet_resident_group_rides_past_fresh_budget():
+    def dispatch_fps(fleet_fn):
+        sched = DispatchScheduler([0], policy="eager", batch_size=6,
+                                  affinity="strict", fingerprint_fn=lambda
+                                  tc: tc.knobs["sw"],
+                                  fleet_resident_fn=fleet_fn)
+        for i, fp in enumerate(["A", "A", "B", "B", "C", "C"]):
+            sched.submit(ftc(i, fp))
+        dispatches = sched.next_dispatches()
+        assert len(dispatches) == 1
+        return sched, sorted({tc.knobs["sw"] for tc in dispatches[0][1]})
+
+    # without the fleet: one fresh compile group per chunk
+    sched0, fps0 = dispatch_fps(None)
+    assert fps0 == ["A"]
+    # with B fleet-resident it rides along for free beside the one fresh
+    sched1, fps1 = dispatch_fps(lambda fp: fp == "B")
+    assert fps1 == ["A", "B"]
+    assert sched1.n_fleet_rides == 1
+    assert sched1.stats()["fleet_rides"] == 1
+    assert "fleet_rides" not in sched0.stats()
+
+
+def test_fleet_resident_fn_errors_never_break_dispatch():
+    sched = DispatchScheduler([0], policy="eager", batch_size=4,
+                              affinity="strict",
+                              fingerprint_fn=lambda tc: tc.knobs["sw"],
+                              fleet_resident_fn=lambda fp: 1 / 0)
+    sched.submit(ftc(0, "A"))
+    out = sched.next_dispatches()
+    assert len(out) == 1 and len(out[0][1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# end to end: N clients x F fingerprints -> exactly F fleet compiles
+# ---------------------------------------------------------------------------
+
+
+class Replay:
+    def __init__(self, ks):
+        self._k = list(ks)
+
+    def ask(self, n):
+        out, self._k = self._k[:n], self._k[n:]
+        return out
+
+    def tell(self, knobs, y):
+        pass
+
+
+def run_fleet(knobs, space, jc, build, store, n_clients=4, pair=None,
+              affinity="off"):
+    pair = pair or transport.LoopbackPair(n_clients)
+    clients = [JClient(jc, build, transport=pair.client(i), client_id=i,
+                       cache_size=16, fleet_mode=store.mode,
+                       fleet_timeout_s=10.0)
+               for i in range(n_clients)]
+    threads = [threading.Thread(target=c.serve, kwargs=dict(poll_s=0.005),
+                                daemon=True) for c in clients]
+    for t in threads:
+        t.start()
+    host = JHost(pair.host(), ResultStore(), timeout_s=60.0, poll_s=0.005)
+    res = host.explore(Replay(knobs), "a", "s", len(knobs), batch_size=6,
+                       dispatch="pipelined", affinity=affinity,
+                       fingerprint_fn=jc.cache_key, fleet_store=store)
+    for i in range(n_clients):
+        host.transport.push(i, {"cmd": "stop"})
+    for t in threads:
+        t.join(timeout=10.0)
+    return res, clients, pair
+
+
+@pytest.mark.parametrize("mode", ["serve", "relay"])
+def test_end_to_end_exactly_f_compiles(mode):
+    space = small_space(n_fps=4)
+    jc = JConfig(space, n_chips=8)
+    build, calls = counting_build(jc)
+    rng = np.random.default_rng(2)
+    knobs = [space.sample(rng) for _ in range(24)]
+    unique = len({jc.cache_key(TestConfig(0, "a", "s", k)) for k in knobs})
+    store = FleetArtifactStore(mode)
+    res, clients, _ = run_fleet(knobs, space, jc, build, store)
+    assert sum(1 for r in res.records if r.status == "ok") >= len(knobs)
+    # round-robin placement, but the store serialized every compile
+    assert sum(c.n_compiled for c in clients) == unique
+    assert len(calls) == unique
+    assert store.stats()["fleet_hits"] > 0
+
+
+def test_warm_peer_run_compiles_nothing():
+    space = small_space(n_fps=4)
+    jc = JConfig(space, n_chips=8)
+    build, calls = counting_build(jc)
+    rng = np.random.default_rng(3)
+    knobs = [space.sample(rng) for _ in range(24)]
+    unique = len({jc.cache_key(TestConfig(0, "a", "s", k)) for k in knobs})
+    store = FleetArtifactStore("serve")
+    run_fleet(knobs, space, jc, build, store)
+    assert len(calls) == unique
+    # brand-new clients (cold LRUs, no disk), same store: pure wire hits
+    res, clients, _ = run_fleet(knobs, space, jc, build, store)
+    assert sum(1 for r in res.records if r.status == "ok") >= len(knobs)
+    assert sum(c.n_compiled for c in clients) == 0
+    assert len(calls) == unique                   # no new builds at all
+    assert sum(c.cache_info()["fleet_hits"] for c in clients) > 0
